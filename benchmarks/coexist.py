@@ -1,0 +1,79 @@
+"""Paper Fig. 16 + §7.3: coexistence of the ML gate with serving.
+
+Measures the three configurations of the paper's latency experiment —
+standalone ML, ML fused with the mandatory function, and the mandatory
+function alone — as (i) wall time on the CPU smoke config and (ii)
+compiled FLOPs/bytes deltas (the NDA-free analogue of relative latency).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.arch import model as M
+from repro.configs import get_smoke_config
+from repro.core import PlanterConfig, plant
+from repro.data import load_dataset
+
+from .common import emit, time_us
+
+
+def _cost(fn, *args):
+    c = jax.jit(fn).lower(*args).compile().cost_analysis()
+    if isinstance(c, (list, tuple)):
+        c = c[0]
+    return float(c.get("flops", 0)), float(c.get("bytes accessed", 0))
+
+
+def main(quick: bool = True):
+    ds = load_dataset("nasdaq", n=2000)  # financial use case, per paper §7.6
+    res = plant(PlanterConfig(model="rf", size="S"), ds.X_train, ds.y_train,
+                None)
+    gate_fn = res.mapped.jax_predict("jnp")
+
+    cfg = get_smoke_config("qwen2_1_5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B = 8
+    state = M.init_decode_state(cfg, B, 64)
+    toks = jnp.zeros((B, 1), jnp.int32)
+    feats = jnp.asarray(ds.X_test[:B])
+
+    def bare(p, s, t):
+        return M.decode_step(p, s, t, cfg)
+
+    def fused(p, s, t, f):
+        labels = gate_fn(f)
+        logits, s = M.decode_step(p, s, t, cfg)
+        return logits, s, labels
+
+    def gate_only(f):
+        return gate_fn(f)
+
+    f_b, by_b = _cost(bare, params, state, toks)
+    f_f, by_f = _cost(fused, params, state, toks, feats)
+    f_g, by_g = _cost(gate_only, feats)
+
+    jb = jax.jit(bare)
+    jf = jax.jit(fused)
+    jg = jax.jit(gate_only)
+    t_bare = time_us(lambda: jax.block_until_ready(jb(params, state, toks)))
+    t_fused = time_us(lambda: jax.block_until_ready(
+        jf(params, state, toks, feats)))
+    t_gate = time_us(lambda: jax.block_until_ready(jg(feats)))
+
+    rel_flops = (f_f - f_b) / f_b * 100
+    rel_bytes = (by_f - by_b) / by_b * 100
+    rel_wall = (t_fused - t_bare) / t_bare * 100
+    emit("fig16/serve-bare", t_bare, f"flops={f_b:.3e};bytes={by_b:.3e}")
+    emit("fig16/gate-standalone", t_gate, f"flops={f_g:.3e};bytes={by_g:.3e}")
+    emit("fig16/serve+gate-fused", t_fused,
+         f"flops={f_f:.3e};overhead_flops_pct={rel_flops:.2f};"
+         f"overhead_bytes_pct={rel_bytes:.2f};overhead_wall_pct={rel_wall:.2f}")
+    # paper claim: <4.7% overhead when combined with the mandatory function
+    assert rel_flops < 5.0, rel_flops
+    return dict(rel_flops=rel_flops, rel_bytes=rel_bytes, rel_wall=rel_wall)
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,39 @@
+"""Shared benchmark helpers (metrics, timing, CSV emission)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+
+def macro_f1(y_true: np.ndarray, y_pred: np.ndarray, n_classes: int) -> float:
+    f1s = []
+    for k in range(n_classes):
+        tp = ((y_pred == k) & (y_true == k)).sum()
+        fp = ((y_pred == k) & (y_true != k)).sum()
+        fn = ((y_pred != k) & (y_true == k)).sum()
+        f1s.append(2 * tp / max(2 * tp + fp + fn, 1))
+    return float(np.mean(f1s))
+
+
+def accuracy(y_true, y_pred) -> float:
+    return float((np.asarray(y_true) == np.asarray(y_pred)).mean())
+
+
+def time_us(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(*args)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row)

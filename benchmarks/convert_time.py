@@ -1,0 +1,39 @@
+"""Paper Fig. 10/17: train + convert wall time per model (S and M sizes)."""
+from __future__ import annotations
+
+from repro.core import PlanterConfig, plant
+from repro.data import load_dataset
+
+from .common import emit
+
+MODELS = ["dt", "rf", "xgb", "iforest", "svm", "nb", "kmeans", "knn",
+          "pca", "ae", "bnn"]
+UNSUPERVISED = {"kmeans", "pca", "ae"}
+
+
+def main(quick: bool = True):
+    ds = load_dataset("unsw", n=2000 if quick else 6000)
+    rows = []
+    for size in ("S",) if quick else ("S", "M"):
+        for model in MODELS:
+            cfg = PlanterConfig(model=model, size=size)
+            if model == "bnn":
+                cfg.train_params = dict(epochs=3 if quick else 20)
+            y = None if model in UNSUPERVISED else ds.y_train
+            res = plant(cfg, ds.X_train, y, None)
+            rows.append(dict(model=model, size=size,
+                             train_s=res.train_seconds,
+                             convert_s=res.convert_seconds))
+            emit(f"fig10/{model}-{size}",
+                 (res.train_seconds + res.convert_seconds) * 1e6,
+                 f"train_s={res.train_seconds:.3f};"
+                 f"convert_s={res.convert_seconds:.3f}")
+    # paper claim: conversion < 10 s for small models
+    for r in rows:
+        if r["size"] == "S":
+            assert r["convert_s"] < 10.0, r
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,86 @@
+"""Dry-run of the paper's technique AT POD SCALE: the Planter gate fused
+into the qwen3-32b decode step on the 16×16 (and 2×16×16) mesh.
+
+The gate's tables are tiny (KBs) and replicate; request features shard
+with the batch.  This proves the in-network-ML artifact itself lowers,
+compiles and shards on the production mesh, and measures its marginal
+FLOPs/bytes against the serving step it coexists with — the pod-scale
+version of paper §7.3.
+
+    PYTHONPATH=src:. python -m benchmarks.gate_dryrun
+"""
+import repro.launch.dryrun as DR  # noqa: E402  (XLA device flag first)
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.arch import model as M
+from repro.arch.config import SHAPES
+from repro.configs import get_config
+from repro.core import PlanterConfig, plant
+from repro.data import load_dataset
+from repro.dist import sharding as SH
+from repro.launch.mesh import make_production_mesh
+
+
+def main(multi_pod: bool = False):
+    ds = load_dataset("unsw", n=3000)
+    res = plant(PlanterConfig(model="rf", size="S"), ds.X_train, ds.y_train,
+                None)
+    gate_fn = res.mapped.jax_predict("jnp")
+
+    cfg = get_config("qwen3_32b")
+    shape = SHAPES["decode_32k"]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    B = shape.global_batch
+    params_sds = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    param_sh = SH.param_shardings(params_sds, mesh)
+    state_sds = jax.eval_shape(
+        lambda: M.init_decode_state(cfg, B, shape.seq_len))
+    state_sh = SH.cache_shardings(state_sds, mesh, B)
+    tok_sds = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+               "features": jax.ShapeDtypeStruct((B, 5), jnp.int32)}
+    tok_sh = {"tokens": NamedSharding(mesh, SH.batch_pspec(mesh, B, 2)),
+              "features": NamedSharding(mesh, SH.batch_pspec(mesh, B, 2))}
+
+    def bare(params, state, batch):
+        return M.decode_step(params, state, batch["tokens"], cfg,
+                             gqa_impl="grouped")
+
+    def fused(params, state, batch):
+        labels = gate_fn(batch["features"])
+        logits, state = M.decode_step(params, state, batch["tokens"], cfg,
+                                      gqa_impl="grouped")
+        return logits, state, labels
+
+    rows = {}
+    for name, fn, extra_out in (("bare", bare, False), ("fused", fused, True)):
+        with mesh:
+            outs = (NamedSharding(mesh, P(None, "model")), state_sh)
+            if extra_out:
+                outs = outs + (NamedSharding(mesh,
+                                             SH.batch_pspec(mesh, B, 1)),)
+            jitted = jax.jit(fn, in_shardings=(param_sh, state_sh, tok_sh),
+                             out_shardings=outs, donate_argnums=(1,))
+            lowered = jitted.lower(params_sds, state_sds, tok_sds)
+            compiled = lowered.compile()
+        rows[name] = DR.analyze(lowered, compiled)
+    df = rows["fused"]["flops"] - rows["bare"]["flops"]
+    db = rows["fused"]["bytes"] - rows["bare"]["bytes"]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    print(f"gate_dryrun mesh={mesh_name}: gate adds {df:.3e} flops "
+          f"({100 * df / rows['bare']['flops']:.3f}%) and {db:.3e} bytes "
+          f"({100 * db / rows['bare']['bytes']:.3f}%) to the decode step")
+    with open(f"/root/repo/gate_dryrun_{mesh_name}.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main(multi_pod=False)
+    main(multi_pod=True)

@@ -1,0 +1,83 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline tables from JSON artifacts."""
+import json
+from typing import List
+
+
+def fmt_bytes(x) -> str:
+    if x is None:
+        return "—"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(x) < 1024:
+            return f"{x:.1f}{unit}"
+        x /= 1024
+    return f"{x:.1f}PB"
+
+
+def dryrun_table(path="dryrun_results.json") -> List[str]:
+    rows = json.load(open(path))
+    out = ["| arch | shape | mesh | kind | HLO GFLOPs* | bytes* | coll bytes* | peak mem/dev | compile s |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | both | — | — | — | — "
+                       f"| — | skipped: sub-quadratic-only shape |")
+            continue
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh','?')} "
+                       f"| ERROR | {r['error'][:60]} | | | | |")
+            continue
+        mem = r.get("memory", {})
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['kind']} "
+            f"| {r['flops']/1e9:.1f} | {fmt_bytes(r['bytes'])} "
+            f"| {fmt_bytes(r['collective_bytes_total'])} "
+            f"| {fmt_bytes(mem.get('peak_bytes'))} "
+            f"| {r['compile_seconds']} |")
+    return out
+
+
+def roofline_table(path="roofline_baseline.json") -> List[str]:
+    rows = json.load(open(path))
+    out = ["| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL_FLOPS/HLO | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR {r['error'][:60]} | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} "
+            f"| {r['memory_s']:.3f} | {r['collective_s']:.3f} "
+            f"| **{r['dominant'].replace('_s','')}** "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} |")
+    return out
+
+
+def hillclimb_table(paths=("hillclimb_results.json", "hillclimb_extra.json",
+                           "hillclimb_extra2.json", "hillclimb_extra3.json",
+                           "hillclimb_extra4.json")) -> List[str]:
+    rows = []
+    for p in paths:
+        try:
+            rows += json.load(open(p))
+        except FileNotFoundError:
+            pass
+    out = ["| cell | variant | compute s | memory s | collective s | step bound s |",
+           "|---|---|---|---|---|---|"]
+    for r in rows:
+        if "error" in r:
+            continue
+        out.append(
+            f"| {r['arch']} × {r['shape']} | {r['label']} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | {r['step_s_bound']:.3f} |")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(dryrun_table()))
+    print()
+    print("\n".join(roofline_table()))
+    print()
+    print("\n".join(hillclimb_table()))

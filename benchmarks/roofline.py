@@ -1,0 +1,194 @@
+"""Roofline analysis per (arch × shape) from compiled dry-run artifacts.
+
+Must be imported (or run) before anything else initializes jax — it pulls
+in ``repro.launch.dryrun`` first, which pins 512 placeholder devices.
+
+Accounting methodology (see EXPERIMENTS.md §Roofline):
+
+XLA's ``cost_analysis()`` counts while-loop bodies ONCE, so a scanned
+64-layer model under-reports by ~L×.  We therefore compile each cell
+twice at reduced depth (L1, L2) with every scan structurally removed
+(layer scans unrolled, q-block = full seq, mLSTM chunk = full seq,
+microbatches = 1) and extrapolate affinely — exact, because HLO cost is
+affine in layer count.  Corrections applied on top:
+
+* microbatching re-reads weights: bytes += (m-1) × param_bytes_f32;
+* sLSTM's time scan cannot be unrolled (S steps): analytic per-step
+  flops/bytes are added for the missing (S-1) iterations.
+
+Hardware model (TPU v5e): 197 bf16 TFLOP/s, 819 GB/s HBM, ~50 GB/s/link
+ICI.  Collective shapes in the partitioned HLO are per-device, so
+``collective term = local_collective_bytes / link_bw``.
+"""
+import repro.launch.dryrun as DR  # noqa: E402  (sets XLA_FLAGS first)
+
+import argparse
+import json
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.arch.config import SHAPES
+from repro.configs import ARCH_IDS, get_config
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+LINK_BW = 50e9  # bytes/s / ICI link
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def _variant_layers(cfg) -> Any:
+    """Reduced depths for the affine fit.
+
+    L=1·pat is avoided: XLA special-cases trip-1/length-1 programs (scan
+    elimination, different fusion), breaking affinity — measured in
+    EXPERIMENTS.md §Roofline.  L=2·pat / 3·pat sit on the clean affine
+    segment.
+    """
+    pat = len(cfg.block_pattern) if cfg.block_pattern else 1
+    return 2 * pat, 3 * pat
+
+
+def _slstm_correction(cfg, shape, kind: str) -> Dict[str, float]:
+    """Analytic flops/bytes for the (S-1) uncounted sLSTM scan steps."""
+    if not cfg.block_pattern or "slstm" not in cfg.block_pattern:
+        return {"flops": 0.0, "bytes": 0.0}
+    if kind == "decode":
+        return {"flops": 0.0, "bytes": 0.0}  # decode body runs once: exact
+    n_slstm = sum(1 for i in range(cfg.n_layers)
+                  if cfg.block_pattern[i % len(cfg.block_pattern)] == "slstm")
+    B, S = shape.global_batch, shape.seq_len
+    H, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    per_step = 2 * B * H * hd * 4 * hd + 20 * B * cfg.d_model  # rec + gates
+    mult = 3.0 if kind == "train" else 1.0  # fwd+bwd ~ 3x fwd
+    flops = (S - 1) * per_step * n_slstm * mult
+    bytes_ = (S - 1) * (4 * B * H * hd * 4) * n_slstm * mult  # state traffic
+    return {"flops": flops, "bytes": bytes_}
+
+
+def measure_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+                 overrides: Optional[Dict[str, Any]] = None,
+                 verbose: bool = True) -> Dict[str, Any]:
+    """Roofline terms for one cell via unrolled-variant extrapolation."""
+    overrides = dict(overrides or {})
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    L_full = cfg.n_layers
+    L1, L2 = _variant_layers(cfg)
+    acct = dict(overrides)
+    acct.update(unroll=True, microbatches=1,
+                q_block=shape.seq_len, mlstm_chunk=shape.seq_len)
+
+    def run(n_layers):
+        o = dict(acct)
+        o["n_layers"] = n_layers
+        lowered, meta = DR.lower_cell(arch, shape_name, multi_pod=multi_pod,
+                                      overrides=o)
+        compiled = lowered.compile()
+        return DR.analyze(lowered, compiled), meta
+
+    a1, meta1 = run(L1)
+    a2, _ = run(L2)
+    per_layer = {
+        "flops": (a2["flops"] - a1["flops"]) / (L2 - L1),
+        "bytes": (a2["bytes"] - a1["bytes"]) / (L2 - L1),
+        "coll": (a2["collective_bytes_total"]
+                 - a1["collective_bytes_total"]) / (L2 - L1),
+    }
+    flops = a1["flops"] + per_layer["flops"] * (L_full - L1)
+    bytes_ = a1["bytes"] + per_layer["bytes"] * (L_full - L1)
+    coll = (a1["collective_bytes_total"]
+            + per_layer["coll"] * (L_full - L1))
+    # corrections
+    corr = _slstm_correction(cfg, shape, meta1["kind"])
+    flops += corr["flops"]
+    bytes_ += corr["bytes"]
+    mesh = "2x16x16" if multi_pod else "16x16"
+    chips = CHIPS[mesh]
+    if meta1["kind"] == "train":
+        m_full = overrides.get("microbatches",
+                               8 if shape.global_batch >= 8 else 1)
+        # each microbatch re-reads this chip's weight shard (f32 master)
+        param_bytes_per_chip = 4.0 * cfg.param_count() / chips
+        bytes_ += (m_full - 1) * param_bytes_per_chip
+    # cost_analysis of the partitioned module reports PER-DEVICE work
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_ / HBM_BW
+    coll_s = coll / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * cfg.param_count() * tokens
+        if cfg.n_experts:
+            model_flops = 6.0 * cfg.active_param_count() * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * (cfg.active_param_count()
+                             if cfg.n_experts else cfg.param_count()) * tokens
+    else:
+        tokens = shape.global_batch
+        model_flops = 2.0 * (cfg.active_param_count()
+                             if cfg.n_experts else cfg.param_count()) * tokens
+    hlo_flops_global = flops * chips
+    useful = model_flops / hlo_flops_global if hlo_flops_global else 0.0
+
+    out = {
+        "arch": arch, "shape": shape_name, "mesh": mesh, "kind": meta1["kind"],
+        "hlo_flops_per_chip": flops, "hlo_bytes_per_chip": bytes_,
+        "collective_bytes_per_chip": coll,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_flops_ratio": useful,
+        "step_s_bound": max(terms.values()),
+        "roofline_fraction": (compute_s / max(terms.values())
+                              if max(terms.values()) else 0.0),
+        "per_layer": per_layer,
+    }
+    if verbose:
+        print(f"{arch:24s} {shape_name:12s} {mesh:8s} "
+              f"C={compute_s*1e3:9.2f}ms M={memory_s*1e3:9.2f}ms "
+              f"N={coll_s*1e3:9.2f}ms dom={dominant[:4]} "
+              f"useful={useful:5.2f} roofline={out['roofline_fraction']:.2f}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--moe-impl", default="dense")
+    args = ap.parse_args()
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                cfg = get_config(arch)
+                ok, why = DR.cell_supported(cfg, SHAPES[shape])
+                if ok:
+                    cells.append((arch, shape))
+    else:
+        cells = [(args.arch.replace("-", "_"), args.shape)]
+    results = []
+    for arch, shape in cells:
+        try:
+            results.append(measure_cell(
+                arch, shape, multi_pod=args.multi_pod,
+                overrides={"moe_impl": args.moe_impl}))
+        except Exception as e:
+            print(f"FAIL {arch} {shape}: {e}")
+            results.append({"arch": arch, "shape": shape,
+                            "error": str(e)[:300]})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

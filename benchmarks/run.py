@@ -1,0 +1,39 @@
+"""Benchmark aggregator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Roofline (dry-run based)
+runs separately via ``python -m benchmarks.roofline`` because it needs
+the 512-device XLA flag set before jax initializes.
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full sweeps (slower); default quick mode")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import (accuracy_parity, action_bits, coexist, convert_time,
+                   scalability, throughput, upgrades)
+
+    print("name,us_per_call,derived")
+    failures = []
+    for mod in (accuracy_parity, convert_time, action_bits, scalability,
+                upgrades, throughput, coexist):
+        try:
+            mod.main(quick=quick)
+        except Exception as e:  # keep the suite going; report at the end
+            failures.append((mod.__name__, repr(e)))
+            print(f"{mod.__name__},0.0,ERROR:{e!r}")
+    if failures:
+        print(f"\n{len(failures)} benchmark module(s) failed:",
+              file=sys.stderr)
+        for name, err in failures:
+            print(f"  {name}: {err}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

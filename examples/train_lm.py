@@ -1,0 +1,43 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+Uses the full substrate — token pipeline, microbatched+remat train step,
+AdamW, checkpointing with retention, straggler monitor — on a ~100M
+config (xLSTM-125M at reduced width fits CPU; pass --full for the real
+125M config if you have the minutes).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import dataclasses
+
+from repro.configs import get_config, get_smoke_config
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full", action="store_true",
+                    help="true xlstm-125m config (slow on CPU)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    argv = [
+        "--arch", "xlstm-125m",
+        "--steps", str(args.steps),
+        "--batch", "8", "--seq", "128",
+        "--microbatches", "2",
+        "--lr", "3e-3",
+        "--ckpt-dir", args.ckpt_dir,
+        "--ckpt-every", "50",
+        "--resume", "auto",
+    ]
+    if not args.full:
+        argv.append("--smoke")
+    losses = train_main(argv)
+    print(f"final loss {losses[-1]:.4f} over {len(losses)} steps "
+          f"(checkpoints in {args.ckpt_dir})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .manager import CheckpointManager, config_hash
+
+__all__ = ["CheckpointManager", "config_hash"]

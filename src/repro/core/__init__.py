@@ -1,0 +1,36 @@
+"""Planter core: mapping trained ML models to staged table-lookup pipelines.
+
+The paper's primary contribution, adapted to TPU (see DESIGN.md §2):
+encode-based / lookup-based / direct-mapping strategies over Pallas
+lookup kernels, with the paper's stage/entry resource accounting.
+"""
+from .pipeline import MappedModel, Pipeline, Stage
+from .planter import (
+    DEFAULT_STRATEGY,
+    MAPPERS,
+    PlanterConfig,
+    PlanterResult,
+    SIZE_PARAMS,
+    convert_model,
+    plant,
+    train_model,
+)
+from .tables import (
+    FeatureTable,
+    LookupTable,
+    NodeTable,
+    PackedBnn,
+    Resources,
+    TernaryTable,
+    pack_bits_uint32,
+    pack_codes,
+    range_to_ternary,
+)
+
+__all__ = [
+    "MappedModel", "Pipeline", "Stage", "PlanterConfig", "PlanterResult",
+    "plant", "train_model", "convert_model", "MAPPERS", "DEFAULT_STRATEGY",
+    "SIZE_PARAMS", "FeatureTable", "LookupTable", "NodeTable", "PackedBnn",
+    "Resources", "TernaryTable", "pack_bits_uint32", "pack_codes",
+    "range_to_ternary",
+]

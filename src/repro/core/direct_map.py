@@ -1,0 +1,164 @@
+"""Direct-mapping (DM) solutions — paper §4.3.
+
+DM keeps the model's own structure in the pipeline: tree walks burn one
+stage per depth level (pForest/SwitchTree), BNNs run as XNOR+popcount
+layers (toNIC/N3IC).  Memory-light, stage-hungry — the paper's scalability
+trade-off, which our stage accounting reproduces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from ..ml.tree import TreeArrays
+from .pipeline import MappedModel, Pipeline, Stage
+from .tables import NodeTable, PackedBnn, pack_bits_uint32
+
+
+def _tree_to_node_table(tree: TreeArrays, in_bits: int) -> NodeTable:
+    leaf_label = np.where(
+        tree.feature < 0, tree.value.argmax(axis=1).astype(np.int32), -1
+    )
+    return NodeTable(
+        feature=tree.feature.copy(),
+        threshold=tree.threshold.copy(),
+        left=tree.left.copy(),
+        right=tree.right.copy(),
+        leaf_label=leaf_label.astype(np.int32),
+        depth=int(tree.max_depth),
+        in_bits=in_bits,
+    )
+
+
+def _walk_jnp(nt: NodeTable):
+    feature = jnp.asarray(nt.feature)
+    threshold = jnp.asarray(nt.threshold.astype(np.int32))
+    left = jnp.asarray(nt.left)
+    right = jnp.asarray(nt.right)
+    leaf = jnp.asarray(nt.leaf_label)
+    depth = nt.depth
+
+    def walk(x):  # x: [B, F] int32
+        node = jnp.zeros(x.shape[0], jnp.int32)
+
+        def body(node, _):
+            is_leaf = leaf[node] >= 0
+            f = jnp.maximum(feature[node], 0)
+            go_left = jnp.take_along_axis(x, f[:, None], axis=1)[:, 0] <= threshold[node]
+            nxt = jnp.where(go_left, left[node], right[node])
+            return jnp.where(is_leaf, node, nxt), None
+
+        node, _ = jax.lax.scan(body, node, None, length=depth + 1)
+        return leaf[node]
+
+    return walk
+
+
+@dataclasses.dataclass
+class DMForest:
+    node_tables: List[NodeTable]
+    n_classes: int
+    combine: str  # 'single' | 'vote'
+
+    def predict_np(self, X: np.ndarray) -> np.ndarray:
+        X = np.asarray(X, np.int64)
+        votes = np.stack([nt.walk(X) for nt in self.node_tables], axis=1)
+        if self.combine == "single":
+            return votes[:, 0]
+        out = np.zeros(len(votes), np.int64)
+        for i, v in enumerate(votes):
+            out[i] = np.bincount(v, minlength=self.n_classes).argmax()
+        return out
+
+    def make_jax_fn(self, backend: str = "jnp") -> Callable:
+        # DM has no custom kernel: the walk is gather/compare logic, which
+        # is exactly why the paper calls DM stage- and latency-hungry.
+        walks = [_walk_jnp(nt) for nt in self.node_tables]
+        combine, n_classes = self.combine, self.n_classes
+
+        def fn(x):
+            x = x.astype(jnp.int32)
+            votes = jnp.stack([w(x) for w in walks], axis=1)
+            if combine == "single":
+                return votes[:, 0]
+            onehot = jax.nn.one_hot(votes, n_classes, dtype=jnp.int32)
+            return onehot.sum(axis=1).argmax(axis=1).astype(jnp.int32)
+
+        return jax.jit(fn)
+
+    def pipeline(self) -> Pipeline:
+        # trees walk in parallel; stages = max depth (+1 vote logic)
+        deepest = max(nt.depth for nt in self.node_tables)
+        stages = [
+            Stage("tree_walk", "walk", list(self.node_tables),
+                  extra_stages=deepest - 1)
+        ]
+        if self.combine == "vote":
+            stages.append(Stage("vote", "logic", []))
+        return Pipeline(stages)
+
+
+def map_dt_dm(model, n_features: int, in_bits: int) -> MappedModel:
+    fr = DMForest([_tree_to_node_table(model.tree_, in_bits)],
+                  model.n_classes_, "single")
+    return MappedModel("dt", "dm", fr.pipeline(), fr.predict_np, fr.make_jax_fn)
+
+
+def map_rf_dm(model, n_features: int, in_bits: int) -> MappedModel:
+    fr = DMForest(
+        [_tree_to_node_table(t.tree_, in_bits) for t in model.estimators_],
+        model.n_classes_, "vote",
+    )
+    return MappedModel("rf", "dm", fr.pipeline(), fr.predict_np, fr.make_jax_fn)
+
+
+@dataclasses.dataclass
+class DMBnn:
+    packed: PackedBnn
+    in_bits: int
+    n_features: int
+
+    def _pack_input(self, X: np.ndarray) -> np.ndarray:
+        shifts = np.arange(self.in_bits)
+        bits = ((np.asarray(X, np.int64)[..., None] >> shifts) & 1).reshape(
+            len(X), -1
+        )
+        return pack_bits_uint32(bits)
+
+    def predict_np(self, X: np.ndarray) -> np.ndarray:
+        xp = self._pack_input(X)
+        scores = np.asarray(ops.bnn_forward(xp, self.packed.layers, "jnp"))
+        return scores.argmax(axis=1)
+
+    def make_jax_fn(self, backend: str = "jnp") -> Callable:
+        layers = self.packed.layers
+        in_bits = self.in_bits
+
+        def fn(x):  # [B, F] int -> labels
+            shifts = jnp.arange(in_bits, dtype=jnp.int32)
+            bits = ((x.astype(jnp.int32)[..., None] >> shifts) & 1).reshape(
+                x.shape[0], -1
+            )
+            xp = ops.pack_bits_jnp(bits.astype(jnp.uint32))
+            scores = ops.bnn_forward(xp, layers, backend=backend)
+            return scores.argmax(axis=1).astype(jnp.int32)
+
+        return jax.jit(fn)
+
+    def pipeline(self) -> Pipeline:
+        return Pipeline([Stage("bnn", "bnn", [self.packed])])
+
+
+def map_bnn_dm(model, n_features: int, in_bits: int) -> MappedModel:
+    """Binarize the trained MLP and bit-pack weights (paper Eq. 8)."""
+    layers: List[Tuple[np.ndarray, int]] = []
+    for w in model.binary_weights():  # [n_in, n_out] ±1
+        layers.append((pack_bits_uint32(w.T), w.shape[0]))
+    bnn = DMBnn(PackedBnn(layers), model.in_bits, n_features)
+    return MappedModel("bnn", "dm", bnn.pipeline(), bnn.predict_np,
+                       bnn.make_jax_fn)

@@ -1,0 +1,512 @@
+"""Encode-based (EB) mapping — paper §4.1.
+
+Feature tables slice raw feature space into per-feature *codes*; each
+tree's leaves become ternary rows over the packed code key; ensemble
+decisions are votes / quantized-score sums.  Includes the paper's two
+upgrades over the IIsy baseline: ternary feature/decision tables (range
+-> prefix cover) and default actions for the most-common label.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from ..ml.forest import IsolationForest, _c_factor, _INode
+from ..ml.tree import TreeArrays
+from .pipeline import MappedModel, Pipeline, Stage
+from .tables import (
+    FeatureTable,
+    TernaryTable,
+    key_layout,
+    pack_codes,
+    range_to_ternary,
+)
+
+MAX_ENTRIES_PER_LEAF = 65536
+INT32_MAX = np.iinfo(np.int32).max
+
+
+# ----------------------------------------------------------------- helpers
+def build_feature_tables(
+    trees: Sequence[TreeArrays], n_features: int, in_bits: int
+) -> List[FeatureTable]:
+    """Collect split thresholds per feature across all trees (paper:
+    "Find feature splits").  Stored as (t+1) so that code(x) = #{thr <= x}
+    puts x == t on the left side of an "x <= t" split."""
+    splits: List[set] = [set() for _ in range(n_features)]
+    for t in trees:
+        for node in range(t.n_nodes):
+            f = int(t.feature[node])
+            if f >= 0:
+                splits[f].add(int(t.threshold[node]) + 1)
+    return [
+        FeatureTable(np.array(sorted(s), np.int64), in_bits) for s in splits
+    ]
+
+
+def _code_widths(ftables: Sequence[FeatureTable]) -> List[int]:
+    return [max(1, int(np.ceil(np.log2(max(2, ft.n_codes))))) for ft in ftables]
+
+
+def _thresholds_matrix(ftables: Sequence[FeatureTable]) -> np.ndarray:
+    """[F, T] int32 padded with INT32_MAX for the bucketize kernel."""
+    T = max(1, max(len(ft.thresholds) for ft in ftables))
+    out = np.full((len(ftables), T), INT32_MAX, np.int32)
+    for f, ft in enumerate(ftables):
+        out[f, : len(ft.thresholds)] = ft.thresholds
+    return out
+
+
+def _leaf_ternary_rows(
+    tree: TreeArrays,
+    ftables: Sequence[FeatureTable],
+    in_bits: int,
+    action_of_leaf: Callable[[int], int],
+    default_action: int,
+) -> TernaryTable:
+    """Leaf boxes -> prefix-cover ternary rows over the packed code key."""
+    widths = _code_widths(ftables)
+    layout = key_layout(widths)
+    n_words = max(w for w, _, _ in layout) + 1
+    values, masks, actions = [], [], []
+    for leaf, box in tree.leaf_boxes(len(ftables), 0, 2**in_bits - 1):
+        act = action_of_leaf(leaf)
+        if act == default_action:
+            continue  # paper's default-action upgrade
+        per_feature: List[List[Tuple[int, int]]] = []
+        for f, ft in enumerate(ftables):
+            clo = int(ft.encode(np.array([box[f, 0]]))[0])
+            chi = int(ft.encode(np.array([box[f, 1]]))[0])
+            per_feature.append(range_to_ternary(clo, chi, widths[f]))
+        n_rows = int(np.prod([len(p) for p in per_feature]))
+        if n_rows > MAX_ENTRIES_PER_LEAF:
+            raise ValueError(f"leaf expands to {n_rows} ternary rows")
+        # cross product of per-feature prefixes
+        combos = [([], [])]
+        for p in per_feature:
+            combos = [
+                (vs + [v], ms + [m]) for (vs, ms) in combos for (v, m) in p
+            ]
+        for vs, ms in combos:
+            vw = np.zeros(n_words, np.uint64)
+            mw = np.zeros(n_words, np.uint64)
+            for f, (word, off, width) in enumerate(layout):
+                vw[word] |= np.uint64(vs[f]) << np.uint64(off)
+                mw[word] |= np.uint64(ms[f]) << np.uint64(off)
+            values.append(vw)
+            masks.append(mw)
+            actions.append(act)
+    n = len(values)
+    return TernaryTable(
+        values=np.array(values, np.uint64).astype(np.uint32).reshape(n, n_words)
+        if n
+        else np.zeros((0, n_words), np.uint32),
+        masks=np.array(masks, np.uint64).astype(np.uint32).reshape(n, n_words)
+        if n
+        else np.zeros((0, n_words), np.uint32),
+        priorities=np.arange(n, dtype=np.int32),
+        actions=np.array(actions, np.int32),
+        default_action=default_action,
+        key_bits=sum(widths),
+    )
+
+
+def _pack_codes_jnp(codes: jax.Array, widths: Sequence[int]) -> jax.Array:
+    layout = key_layout(widths)
+    n_words = max(w for w, _, _ in layout) + 1
+    words = [jnp.zeros(codes.shape[0], jnp.uint32) for _ in range(n_words)]
+    for f, (word, off, width) in enumerate(layout):
+        field = codes[:, f].astype(jnp.uint32) & jnp.uint32((1 << width) - 1)
+        words[word] = words[word] | (field << jnp.uint32(off))
+    return jnp.stack(words, axis=1)
+
+
+def _prio_action(tbl: TernaryTable) -> np.ndarray:
+    assert tbl.actions.max(initial=0) < 256, "actions must fit 8 bits"
+    return (tbl.priorities * 256 + tbl.actions).astype(np.int32)
+
+
+# ------------------------------------------------------------ EB ensemble
+@dataclasses.dataclass
+class EBTreeEnsemble:
+    """Shared runtime for all EB tree-family mappings."""
+
+    ftables: List[FeatureTable]
+    tables: List[TernaryTable]
+    in_bits: int
+    combine: str  # 'single' | 'vote' | 'sum_argmax' | 'sum_threshold'
+    n_classes: int
+    tree_class: Optional[np.ndarray] = None  # [n_tables] class of each table (xgb)
+    sum_threshold: float = 0.0  # iforest: anomaly if sum <= threshold
+    dequant: Tuple[float, float] = (1.0, 0.0)  # score = a*q + b
+
+    @property
+    def widths(self) -> List[int]:
+        return _code_widths(self.ftables)
+
+    def encode_np(self, X: np.ndarray) -> np.ndarray:
+        codes = np.stack(
+            [ft.encode(X[:, f]) for f, ft in enumerate(self.ftables)], axis=1
+        )
+        return codes
+
+    def actions_np(self, X: np.ndarray) -> np.ndarray:
+        keys = pack_codes(self.encode_np(X), self.widths)
+        return np.stack([t.match(keys) for t in self.tables], axis=1)
+
+    def _combine_np(self, acts: np.ndarray) -> np.ndarray:
+        if self.combine == "single":
+            return acts[:, 0]
+        if self.combine == "vote":
+            out = np.zeros(len(acts), np.int64)
+            for i, v in enumerate(acts):
+                out[i] = np.bincount(v, minlength=self.n_classes).argmax()
+            return out
+        a, b = self.dequant
+        scores = a * acts + b
+        if self.combine == "sum_threshold":
+            return (scores.sum(axis=1) <= self.sum_threshold).astype(np.int64)
+        # sum_argmax (xgb): accumulate per class
+        logits = np.zeros((len(acts), self.n_classes))
+        for t in range(acts.shape[1]):
+            logits[:, self.tree_class[t]] += scores[:, t]
+        return logits.argmax(axis=1)
+
+    def predict_np(self, X: np.ndarray) -> np.ndarray:
+        return self._combine_np(self.actions_np(np.asarray(X, np.int64)))
+
+    def make_jax_fn(self, backend: str = "jnp") -> Callable:
+        if backend == "pallas_fused":
+            return self._make_fused_fn()
+        thr = jnp.asarray(_thresholds_matrix(self.ftables))
+        widths = self.widths
+        tbls = [
+            (
+                jnp.asarray(t.values),
+                jnp.asarray(t.masks),
+                jnp.asarray(_prio_action(t)),
+                int(t.default_action),
+            )
+            for t in self.tables
+        ]
+        combine = self.combine
+        n_classes = self.n_classes
+        tree_class = (
+            jnp.asarray(self.tree_class) if self.tree_class is not None else None
+        )
+        a, b = self.dequant
+        sum_threshold = self.sum_threshold
+        identity_codes = all(len(ft.thresholds) == 0 for ft in self.ftables)
+
+        def fn(x):
+            x = x.astype(jnp.int32)
+            if identity_codes:
+                codes = x  # KM/KNN: raw quantized values are the codes
+            else:
+                codes = ops.bucketize(x, thr, backend=backend)
+            keys = _pack_codes_jnp(codes, widths)
+            acts = jnp.stack(
+                [
+                    ops.ternary_match(keys, v, m, pa, d, backend=backend)
+                    for (v, m, pa, d) in tbls
+                ],
+                axis=1,
+            )  # [B, n_tables]
+            if combine == "single":
+                return acts[:, 0]
+            if combine == "vote":
+                onehot = jax.nn.one_hot(acts, n_classes, dtype=jnp.int32)
+                return onehot.sum(axis=1).argmax(axis=1).astype(jnp.int32)
+            scores = a * acts.astype(jnp.float32) + b
+            if combine == "sum_threshold":
+                return (scores.sum(axis=1) <= sum_threshold).astype(jnp.int32)
+            logits = scores @ jax.nn.one_hot(
+                tree_class, n_classes, dtype=jnp.float32
+            )
+            return logits.argmax(axis=1).astype(jnp.int32)
+
+        return jax.jit(fn)
+
+    def _make_fused_fn(self) -> Callable:
+        """One Pallas launch per tree: encode+pack+match fused in VMEM."""
+        thr = jnp.asarray(_thresholds_matrix(self.ftables))
+        layout = tuple(key_layout(self.widths))
+        n_words = max(w for w, _, _ in layout) + 1
+        tbls = [
+            (jnp.asarray(t.values), jnp.asarray(t.masks),
+             jnp.asarray(_prio_action(t)), int(t.default_action))
+            for t in self.tables
+        ]
+        combine = self.combine
+        n_classes = self.n_classes
+        tree_class = (jnp.asarray(self.tree_class)
+                      if self.tree_class is not None else None)
+        a, b = self.dequant
+        sum_threshold = self.sum_threshold
+        identity = all(len(ft.thresholds) == 0 for ft in self.ftables)
+
+        def fn(x):
+            x = x.astype(jnp.int32)
+            acts = jnp.stack([
+                ops.fused_eb_match(x, thr, v, m, pa, layout, n_words, d,
+                                   identity=identity)
+                if len(v) else jnp.full(x.shape[0], d, jnp.int32)
+                for (v, m, pa, d) in tbls
+            ], axis=1)
+            if combine == "single":
+                return acts[:, 0]
+            if combine == "vote":
+                onehot = jax.nn.one_hot(acts, n_classes, dtype=jnp.int32)
+                return onehot.sum(axis=1).argmax(axis=1).astype(jnp.int32)
+            scores = a * acts.astype(jnp.float32) + b
+            if combine == "sum_threshold":
+                return (scores.sum(axis=1) <= sum_threshold).astype(jnp.int32)
+            logits = scores @ jax.nn.one_hot(tree_class, n_classes,
+                                             dtype=jnp.float32)
+            return logits.argmax(axis=1).astype(jnp.int32)
+
+        return jax.jit(fn)
+
+    def pipeline(self) -> Pipeline:
+        stages = []
+        identity = all(len(ft.thresholds) == 0 for ft in self.ftables)
+        if not identity:
+            stages.append(Stage("feature_tables", "feature", list(self.ftables)))
+        stages.append(Stage("code_tables", "ternary", list(self.tables)))
+        if self.combine != "single":
+            stages.append(Stage("decision", "logic", []))
+        return Pipeline(stages)
+
+
+def _mapped(kind: str, ens: EBTreeEnsemble, meta=None) -> MappedModel:
+    return MappedModel(
+        model_kind=kind,
+        strategy="eb",
+        pipeline=ens.pipeline(),
+        predict_np=ens.predict_np,
+        make_jax_fn=ens.make_jax_fn,
+        meta=meta or {},
+    )
+
+
+# ------------------------------------------------------------- per model
+def map_dt_eb(model, n_features: int, in_bits: int) -> MappedModel:
+    tree: TreeArrays = model.tree_
+    ftables = build_feature_tables([tree], n_features, in_bits)
+    default = int(tree.value.sum(axis=0).argmax())
+    tbl = _leaf_ternary_rows(
+        tree, ftables, in_bits,
+        lambda leaf: int(tree.value[leaf].argmax()), default,
+    )
+    ens = EBTreeEnsemble(ftables, [tbl], in_bits, "single", model.n_classes_)
+    return _mapped("dt", ens)
+
+
+def map_rf_eb(model, n_features: int, in_bits: int) -> MappedModel:
+    trees = [t.tree_ for t in model.estimators_]
+    ftables = build_feature_tables(trees, n_features, in_bits)
+    tables = []
+    for t in trees:
+        default = int(t.value.sum(axis=0).argmax())
+        tables.append(
+            _leaf_ternary_rows(
+                t, ftables, in_bits,
+                lambda leaf, t=t: int(t.value[leaf].argmax()), default,
+            )
+        )
+    ens = EBTreeEnsemble(ftables, tables, in_bits, "vote", model.n_classes_)
+    return _mapped("rf", ens)
+
+
+def map_xgb_eb(model, n_features: int, in_bits: int,
+               score_bits: int = 8) -> MappedModel:
+    trees, tree_class = [], []
+    for round_trees in model.trees_:
+        for k, t in enumerate(round_trees):
+            trees.append(t.tree_)
+            tree_class.append(k)
+    ftables = build_feature_tables(trees, n_features, in_bits)
+    # global quantization of lr * leaf values to score_bits
+    leaf_vals = np.concatenate(
+        [model.learning_rate * t.value[t.leaves(), 0] for t in trees]
+    )
+    lo, hi = float(leaf_vals.min()), float(leaf_vals.max())
+    span = max(hi - lo, 1e-9)
+    qmax = 2**score_bits - 1
+
+    def quant(v: float) -> int:
+        return int(round((v - lo) / span * qmax))
+
+    tables = []
+    for t in trees:
+        leaf_q = {
+            int(l): quant(model.learning_rate * float(t.value[l, 0]))
+            for l in t.leaves()
+        }
+        counts = np.bincount(list(leaf_q.values()), minlength=qmax + 1)
+        default = int(counts.argmax())
+        tables.append(
+            _leaf_ternary_rows(t, ftables, in_bits, lambda l: leaf_q[int(l)], default)
+        )
+    ens = EBTreeEnsemble(
+        ftables, tables, in_bits, "sum_argmax", model.n_classes_,
+        tree_class=np.array(tree_class, np.int32),
+        dequant=(span / qmax, lo),
+    )
+    return _mapped("xgb", ens, {"score_bits": score_bits})
+
+
+def _inode_to_arrays(nodes: List[_INode]) -> TreeArrays:
+    n = len(nodes)
+    feature = np.array([nd.feature for nd in nodes], np.int32)
+    value = np.zeros((n, 1))
+    for i, nd in enumerate(nodes):
+        if nd.feature < 0:
+            value[i, 0] = nd.depth + _c_factor(nd.size)
+    return TreeArrays(
+        feature=feature,
+        threshold=np.array([nd.threshold for nd in nodes], np.int64),
+        left=np.array([nd.left for nd in nodes], np.int32),
+        right=np.array([nd.right for nd in nodes], np.int32),
+        value=value,
+        depth=np.array([nd.depth for nd in nodes], np.int32),
+    )
+
+
+def map_iforest_eb(model: IsolationForest, n_features: int, in_bits: int,
+                   score_bits: int = 8) -> MappedModel:
+    trees = [_inode_to_arrays(t) for t in model.trees_]
+    ftables = build_feature_tables(trees, n_features, in_bits)
+    all_h = np.concatenate([t.value[t.leaves(), 0] for t in trees])
+    lo, hi = float(all_h.min()), float(all_h.max())
+    span = max(hi - lo, 1e-9)
+    qmax = 2**score_bits - 1
+    tables = []
+    for t in trees:
+        leaf_q = {
+            int(l): int(round((float(t.value[l, 0]) - lo) / span * qmax))
+            for l in t.leaves()
+        }
+        counts = np.bincount(list(leaf_q.values()), minlength=qmax + 1)
+        default = int(counts.argmax())
+        tables.append(
+            _leaf_ternary_rows(t, ftables, in_bits, lambda l: leaf_q[int(l)], default)
+        )
+    # anomaly iff E[h] <= -log2(threshold) * c(n)  (paper Eq. 1)
+    c = _c_factor(model.sample_size_)
+    h_thresh_total = -np.log2(max(model.threshold_, 1e-9)) * c * len(trees)
+    ens = EBTreeEnsemble(
+        ftables, tables, in_bits, "sum_threshold", 2,
+        sum_threshold=float(h_thresh_total), dequant=(span / qmax, lo),
+    )
+    return _mapped("iforest", ens, {"score_bits": score_bits})
+
+
+# ----------------------------------------------- KM / KNN quadtree encode
+def _quadtree_rows(
+    label_fn: Callable[[np.ndarray], np.ndarray],
+    n_features: int,
+    in_bits: int,
+    max_depth: int,
+) -> TernaryTable:
+    """Recursive 2^n-tree cell labeling (Clustreams-style, paper §4.1.5).
+
+    ``label_fn(points [M, F]) -> labels [M]``.  A cell is emitted when all
+    its corners (plus center) agree or max depth is reached.
+    """
+    values, masks, actions = [], [], []
+    layout = key_layout([in_bits] * n_features)
+    n_words = max(w for w, _, _ in layout) + 1
+    corner_grid = np.array(
+        np.meshgrid(*[[0, 1]] * n_features, indexing="ij")
+    ).reshape(n_features, -1).T  # [2^F, F]
+
+    def emit(prefix: np.ndarray, depth: int, label: int):
+        shift = in_bits - depth
+        vw = np.zeros(n_words, np.uint64)
+        mw = np.zeros(n_words, np.uint64)
+        field_mask = (((1 << depth) - 1) << shift) & ((1 << in_bits) - 1)
+        for f, (word, off, width) in enumerate(layout):
+            vw[word] |= np.uint64(int(prefix[f]) << shift) << np.uint64(off)
+            mw[word] |= np.uint64(field_mask) << np.uint64(off)
+        values.append(vw)
+        masks.append(mw)
+        actions.append(label)
+
+    def rec(prefix: np.ndarray, depth: int):
+        shift = in_bits - depth
+        lo = prefix << shift
+        hi = lo + (1 << shift) - 1
+        corners = lo[None, :] + corner_grid * (hi - lo)[None, :]
+        center = (lo + hi) // 2
+        pts = np.vstack([corners, center[None]])
+        labels = label_fn(pts)
+        if depth >= max_depth or np.all(labels == labels[0]):
+            emit(prefix, depth, int(labels[-1]))
+            return
+        for child in corner_grid:
+            rec(prefix * 2 + child, depth + 1)
+
+    rec(np.zeros(n_features, np.int64), 0)
+    n = len(values)
+    return TernaryTable(
+        values=np.array(values, np.uint64).astype(np.uint32).reshape(n, n_words),
+        masks=np.array(masks, np.uint64).astype(np.uint32).reshape(n, n_words),
+        priorities=np.arange(n, dtype=np.int32),
+        actions=np.array(actions, np.int32),
+        default_action=0,
+        key_bits=in_bits * n_features,
+    )
+
+
+def _identity_ftables(n_features: int, in_bits: int) -> List[FeatureTable]:
+    # raw quantized values ARE the codes; widths forced to in_bits by the
+    # quadtree layout (no thresholds -> n_codes==1, so override widths).
+    class _IdTable(FeatureTable):
+        @property
+        def n_codes(self):  # type: ignore[override]
+            return 2**self.in_bits
+
+        def encode(self, values):  # identity: raw value is the code
+            return np.asarray(values, np.int32)
+
+        def resources(self):
+            from .tables import Resources
+            return Resources(stages=0, entries=0, entry_bits=0)
+
+    return [_IdTable(np.array([], np.int64), in_bits) for _ in range(n_features)]
+
+
+def map_kmeans_eb(model, n_features: int, in_bits: int,
+                  max_depth: int = 3) -> MappedModel:
+    centers = model.cluster_centers_
+
+    def label_fn(pts):
+        d2 = ((pts[:, None, :] - centers[None]) ** 2).sum(-1)
+        return d2.argmin(axis=1)
+
+    tbl = _quadtree_rows(label_fn, n_features, in_bits, max_depth)
+    ens = EBTreeEnsemble(
+        _identity_ftables(n_features, in_bits), [tbl], in_bits, "single",
+        len(centers),
+    )
+    return _mapped("kmeans", ens, {"max_depth": max_depth})
+
+
+def map_knn_eb(model, n_features: int, in_bits: int,
+               max_depth: int = 3) -> MappedModel:
+    tbl = _quadtree_rows(
+        lambda pts: model.predict(pts), n_features, in_bits, max_depth
+    )
+    ens = EBTreeEnsemble(
+        _identity_ftables(n_features, in_bits), [tbl], in_bits, "single",
+        model.n_classes_,
+    )
+    return _mapped("knn", ens, {"max_depth": max_depth})
+
+

@@ -1,0 +1,102 @@
+"""Match/action pipeline IR with the paper's resource accounting.
+
+A ``Pipeline`` is an ordered list of logical stages.  Tables that the paper
+lets share one physical stage (e.g. all EB feature tables; all per-tree code
+tables) live in a single ``Stage`` and are accounted once for stage count
+but summed for entries — exactly the paper's model (§4.1: "all feature
+tables share a pipeline stage ... the entire mapping requires only two
+logical stages").
+
+``MappedModel`` is the deployable artifact: accounting + a numpy reference
+predictor + a JAX predictor factory (backend 'jnp' uses the pure-jnp kernel
+oracles; backend 'pallas' uses the Pallas TPU kernels, run in interpret
+mode on CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from .tables import Resources
+
+__all__ = ["Stage", "Pipeline", "MappedModel"]
+
+
+@dataclasses.dataclass
+class Stage:
+    name: str
+    kind: str  # feature | ternary | lut | logic | walk | bnn
+    tables: List[Any] = dataclasses.field(default_factory=list)
+    extra_stages: int = 0  # additional sequential stages this step burns (DM)
+
+    def resources(self) -> Resources:
+        entries = 0
+        bits = 0
+        stages = 1 + self.extra_stages
+        for t in self.tables:
+            r = t.resources()
+            entries += r.entries
+            bits = max(bits, r.entry_bits)
+            stages = max(stages, r.stages + self.extra_stages)
+        return Resources(stages=stages, entries=entries, entry_bits=bits)
+
+
+@dataclasses.dataclass
+class Pipeline:
+    stages: List[Stage]
+
+    def resources(self) -> Resources:
+        total = Resources(stages=0, entries=0, entry_bits=0)
+        for s in self.stages:
+            total = total + s.resources()
+        return total
+
+    def summary(self) -> Dict[str, int]:
+        r = self.resources()
+        return {
+            "stages": r.stages,
+            "entries": r.entries,
+            "entry_bits": r.entry_bits,
+            "table_bits": r.table_bits,
+        }
+
+
+@dataclasses.dataclass
+class MappedModel:
+    """A trained model mapped to the M/A pipeline."""
+
+    model_kind: str  # e.g. 'rf'
+    strategy: str  # 'eb' | 'lb' | 'dm'
+    pipeline: Pipeline
+    predict_np: Callable[[np.ndarray], np.ndarray]
+    make_jax_fn: Callable[[str], Callable]  # backend -> jitted fn
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    convert_seconds: float = 0.0
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        return self.predict_np(np.asarray(x))
+
+    def jax_predict(self, backend: str = "jnp") -> Callable:
+        return self.make_jax_fn(backend)
+
+    def resources(self) -> Resources:
+        return self.pipeline.resources()
+
+
+class _Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.perf_counter() - self.t0
+
+
+def timed(fn: Callable[[], MappedModel]) -> MappedModel:
+    with _Timer() as t:
+        m = fn()
+    m.convert_seconds = t.seconds
+    return m

@@ -1,0 +1,4 @@
+"""Data substrate: use-case generators + the LM token pipeline."""
+from .synthetic import Dataset, load_dataset, DATASETS
+
+__all__ = ["Dataset", "load_dataset", "DATASETS"]

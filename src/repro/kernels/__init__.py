@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the Planter data-plane primitives.
+
+Each kernel ships as ``<name>.py`` (pl.pallas_call + BlockSpec), with its
+jit'd public wrapper in ``ops.py`` and its pure-jnp oracle in ``ref.py``.
+"""
+from .ops import (
+    bucketize,
+    ternary_match,
+    lb_lookup,
+    bnn_popcount_matmul,
+    bnn_forward,
+    pack_bits_jnp,
+)
+
+__all__ = [
+    "bucketize",
+    "ternary_match",
+    "lb_lookup",
+    "bnn_popcount_matmul",
+    "bnn_forward",
+    "pack_bits_jnp",
+]

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: EB feature-table encode (value -> code).
+
+The switch's per-feature range table becomes a branchless compare-count
+against the per-feature split thresholds, held entirely in VMEM.  One
+kernel launch encodes *all* features — the TPU realization of the paper's
+"all feature tables share one logical stage".
+
+Tiling: grid over batch blocks; a block holds ``(block_b, F)`` values and
+the full ``(F, T)`` threshold matrix (split counts are small: 2^depth-ish).
+The compare-count broadcast ``(block_b, F, 1) >= (1, F, T)`` vectorizes on
+the VPU; T is padded to a lane multiple by the caller.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 256
+
+
+def _bucketize_kernel(values_ref, thresholds_ref, out_ref):
+    v = values_ref[...]  # [Bb, F] int32
+    t = thresholds_ref[...]  # [F, T] int32 (padded with INT32_MAX)
+    codes = (v[:, :, None] >= t[None, :, :]).astype(jnp.int32).sum(axis=-1)
+    out_ref[...] = codes
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def bucketize_pallas(
+    values: jax.Array,
+    thresholds: jax.Array,
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = True,
+) -> jax.Array:
+    """values [B, F] int32, thresholds [F, T] int32 -> codes [B, F] int32."""
+    B, F = values.shape
+    Ft, T = thresholds.shape
+    assert F == Ft, (F, Ft)
+    pad_b = (-B) % block_b
+    if pad_b:
+        values = jnp.pad(values, ((0, pad_b), (0, 0)))
+    Bp = B + pad_b
+    out = pl.pallas_call(
+        _bucketize_kernel,
+        grid=(Bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, F), lambda i: (i, 0)),
+            pl.BlockSpec((F, T), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, F), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, F), jnp.int32),
+        interpret=interpret,
+    )(values, thresholds)
+    return out[:B]

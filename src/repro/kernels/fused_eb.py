@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: fully-fused EB pipeline (encode + pack + match).
+
+The paper's EB promise is a *constant two logical stages*; on TPU the
+natural endpoint is ONE kernel launch per tree: feature thresholds, the
+code-key layout, and the ternary rows all live in VMEM, and a batch tile
+flows encode -> pack -> match without touching HBM in between.  This is
+the deployment kernel for gate-sized tables (entries ≤ a few thousand
+rows, thresholds ≤ VMEM tile); larger models fall back to the staged
+kernels (`ops.bucketize` + `ops.ternary_match`).
+
+Layout constants (shift/word per feature) are Python-static, baked into
+the kernel body at trace time — exactly like P4 compiles the key layout
+into the parser.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 256
+
+
+def _fused_kernel(values_ref, thresholds_ref, rows_v_ref, rows_m_ref,
+                  pa_ref, out_ref, *, layout: Tuple[Tuple[int, int, int], ...],
+                  n_words: int, identity: bool):
+    v = values_ref[...]  # [Bb, F] int32
+    if identity:  # KM/KNN quadtree: raw quantized values ARE the codes
+        codes = v.astype(jnp.uint32)
+    else:
+        t = thresholds_ref[...]  # [F, T] int32 (INT32_MAX padded)
+        codes = (v[:, :, None] >= t[None, :, :]).astype(jnp.uint32).sum(-1)
+    # pack codes into key words with static layout
+    Bb = codes.shape[0]
+    words = [jnp.zeros((Bb,), jnp.uint32) for _ in range(n_words)]
+    for f, (word, off, width) in enumerate(layout):
+        field = codes[:, f] & jnp.uint32((1 << width) - 1)
+        words[word] = words[word] | (field << jnp.uint32(off))
+    keys = jnp.stack(words, axis=1)  # [Bb, W]
+    rows_v = rows_v_ref[...]  # [N, W]
+    rows_m = rows_m_ref[...]
+    pa = pa_ref[...]  # [N]
+    hit = jnp.all((keys[:, None, :] & rows_m[None]) == rows_v[None], axis=-1)
+    score = jnp.where(hit, pa[None, :], -1)
+    out_ref[...] = score.max(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("layout", "n_words",
+                                             "default_action", "block_b",
+                                             "interpret", "identity"))
+def fused_eb_pallas(
+    values: jax.Array,
+    thresholds: jax.Array,
+    rows_v: jax.Array,
+    rows_m: jax.Array,
+    prio_action: jax.Array,
+    *,
+    layout: Tuple[Tuple[int, int, int], ...],
+    n_words: int,
+    default_action: int,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = True,
+    identity: bool = False,
+) -> jax.Array:
+    """values [B,F] -> actions [B] in one kernel launch."""
+    B, F = values.shape
+    N, W = rows_v.shape
+    pad_b = (-B) % block_b
+    if pad_b:
+        values = jnp.pad(values, ((0, pad_b), (0, 0)))
+    Bp = B + pad_b
+    kern = functools.partial(_fused_kernel, layout=layout, n_words=n_words,
+                             identity=identity)
+    best = pl.pallas_call(
+        kern,
+        grid=(Bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, F), lambda i: (i, 0)),
+            pl.BlockSpec(thresholds.shape, lambda i: (0, 0)),
+            pl.BlockSpec((N, W), lambda i: (0, 0)),
+            pl.BlockSpec((N, W), lambda i: (0, 0)),
+            pl.BlockSpec((N,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Bp,), jnp.int32),
+        interpret=interpret,
+    )(values.astype(jnp.int32), thresholds.astype(jnp.int32),
+      rows_v.astype(jnp.uint32), rows_m.astype(jnp.uint32),
+      prio_action.astype(jnp.int32))
+    best = best[:B]
+    return jnp.where(best >= 0, best % 256, default_action).astype(jnp.int32)

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the semantics the kernels must match bit-exactly; tests sweep
+shapes/dtypes and ``assert_allclose`` kernel-vs-ref.  They are also the
+'jnp' execution backend for mapped models.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "bucketize_ref",
+    "ternary_match_ref",
+    "lb_lookup_ref",
+    "bnn_popcount_matmul_ref",
+]
+
+
+def bucketize_ref(values: jax.Array, thresholds: jax.Array) -> jax.Array:
+    """codes[b, f] = #{t : thresholds[f, t] <= values[b, f]}.
+
+    ``thresholds`` is [F, T] int32 padded with INT32_MAX; values [B, F].
+    Equivalent to ``searchsorted(..., side='right')`` per feature.
+    """
+    return (
+        (values[:, :, None] >= thresholds[None, :, :]).sum(axis=-1).astype(jnp.int32)
+    )
+
+
+def ternary_match_ref(
+    keys: jax.Array,
+    values: jax.Array,
+    masks: jax.Array,
+    prio_action: jax.Array,
+    default_action: int,
+) -> jax.Array:
+    """TCAM lookup.  keys [B, W] uint32; rows (values, masks) [N, W].
+
+    ``prio_action[n] = priority[n] * 256 + action[n]`` (int32; actions are
+    8-bit by construction — see core.tables).  Returns action of the
+    highest-priority matching row, else ``default_action``.
+    """
+    hit = jnp.all((keys[:, None, :] & masks[None]) == values[None], axis=-1)
+    score = jnp.where(hit, prio_action[None, :], -1)  # [B, N]
+    best = score.max(axis=1)
+    return jnp.where(best >= 0, best % 256, default_action).astype(jnp.int32)
+
+
+def lb_lookup_ref(codes: jax.Array, luts: jax.Array) -> jax.Array:
+    """out[b, k] = sum_f luts[f, codes[b, f], k].  codes [B,F]; luts [F,V,K]."""
+    gathered = jnp.take_along_axis(
+        luts[None], codes.astype(jnp.int32)[:, :, None, None], axis=2
+    )  # [B, F, 1, K]
+    return gathered[:, :, 0, :].sum(axis=1).astype(jnp.int32)
+
+
+def bnn_popcount_matmul_ref(x_packed: jax.Array, w_packed: jax.Array) -> jax.Array:
+    """counts[b, n] = sum_w popcount(XNOR(x[b, w], w[n, w])) over packed words.
+
+    x_packed [B, W] uint32, w_packed [N, W] uint32 -> [B, N] int32.
+    Note: XNOR counts matching bits including padding bits; callers must
+    account for pad (ops.bnn_forward handles it).
+    """
+    xnor = ~(x_packed[:, None, :] ^ w_packed[None, :, :])
+    return jax.lax.population_count(xnor).sum(axis=-1).astype(jnp.int32)

@@ -1,0 +1,5 @@
+"""Launchers: mesh construction, dry-run, train, serve.
+
+NOTE: importing ``repro.launch.dryrun`` sets the 512-placeholder-device
+XLA flag; import it first (before jax initializes) or via subprocess.
+"""

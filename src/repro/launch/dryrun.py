@@ -1,0 +1,353 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first
+# initialization.  The 512 placeholder host devices exist ONLY here.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves (a) the sharding config is coherent (no SPMD
+errors), (b) the program fits (memory_analysis), and (c) yields the
+roofline terms (cost_analysis + collective bytes parsed from HLO).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+        --shape train_4k [--multi-pod] [--all] [--out out.json]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..arch import model as M
+from ..arch.config import ArchConfig, SHAPES, ShapeConfig
+from ..configs import ARCH_IDS, get_config
+from ..dist import sharding as SH
+from ..train import optimizer as OPT
+from ..train.step import TrainConfig, make_train_step
+from .mesh import make_production_mesh
+
+# shapes skipped per spec: long_500k needs sub-quadratic attention
+def cell_supported(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return False, "long_500k skipped: pure full-attention arch (DESIGN §4)"
+    return True, ""
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        return {"tokens": sds((B, 1), jnp.int32)}
+    batch = {"tokens": sds((B, S), jnp.int32)}
+    if cfg.family == "encdec":
+        enc_len = min(S, cfg.frontend_seq or S)
+        batch["frames"] = sds((B, enc_len, cfg.frontend_dim), jnp.float32)
+    if cfg.family == "vlm":
+        batch["patches"] = sds((B, cfg.frontend_seq, cfg.frontend_dim),
+                               jnp.float32)
+    return batch
+
+
+def _microbatches(cfg: ArchConfig, shape: ShapeConfig, mesh) -> int:
+    """Grad-accumulation depth: keep per-device microbatch ~1-2 sequences."""
+    dp = SH.data_axis(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in
+                           (dp if isinstance(dp, tuple) else (dp,))]))
+    per_dev = max(1, shape.global_batch // dp_size)
+    return max(1, min(per_dev, 8))
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               overrides: Optional[Dict[str, Any]] = None):
+    """Lower one (arch, shape, mesh) cell; returns (lowered, meta).
+
+    ``overrides`` supports roofline accounting variants: ``n_layers``
+    (reduced depth), ``unroll`` (unroll layer scans so cost_analysis sees
+    every iteration — XLA counts while-loop bodies once), plus the perf
+    knobs (microbatches, moe_impl, q_block, mlstm_chunk).
+    """
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        raise ValueError(why)
+    overrides = overrides or {}
+    if overrides.get("pad_q_heads"):
+        cfg = _dc.replace(cfg, pad_q_heads=True)
+    if "n_layers" in overrides:
+        repl = {"n_layers": overrides["n_layers"]}
+        if cfg.n_encoder_layers:  # scale encoder proportionally
+            repl["n_encoder_layers"] = max(
+                1, cfg.n_encoder_layers * overrides["n_layers"]
+                // cfg.n_layers)
+        cfg = _dc.replace(cfg, **repl)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = SH.data_axis(mesh)
+    unroll = bool(overrides.get("unroll", False))
+    mlstm_chunk = int(overrides.get("mlstm_chunk", 0))
+
+    params_sds = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    param_sh = SH.param_shardings(params_sds, mesh)
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(
+            microbatches=overrides.get(
+                "microbatches", _microbatches(cfg, shape, mesh)),
+            moe_impl=overrides.get("moe_impl", "dense"),
+            q_block=overrides.get("q_block", 512),
+            compress_grads=overrides.get("compress_grads", False),
+            unroll=unroll, mlstm_chunk=mlstm_chunk,
+            remat_policy=overrides.get("remat_policy", "full"),
+            adamw=OPT.AdamWConfig(
+                m_dtype=overrides.get("m_dtype", "f32")),
+        )
+        state_sds = jax.eval_shape(
+            lambda p: {"opt": OPT.init(p, tcfg.adamw),
+                       "step": jnp.zeros((), jnp.int32)},
+            params_sds)
+        state_sh = {
+            "opt": OPT.AdamWState(
+                m=SH.param_shardings(params_sds, mesh),
+                v=SH.param_shardings(params_sds, mesh),
+                count=NamedSharding(mesh, P())),
+            "step": NamedSharding(mesh, P()),
+        }
+        if tcfg.compress_grads:
+            state_sds["err"] = jax.eval_shape(lambda p: p, params_sds)
+            state_sh["err"] = SH.param_shardings(params_sds, mesh)
+        batch_sds = input_specs(cfg, shape)
+        batch_sh = jax.tree.map(
+            lambda l: NamedSharding(
+                mesh, SH.batch_pspec(mesh, l.shape[0], len(l.shape))),
+            batch_sds)
+        step_fn = make_train_step(cfg, tcfg)
+        with mesh:
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(param_sh, state_sh, batch_sh),
+                out_shardings=(param_sh, state_sh, NamedSharding(mesh, P())),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_sds, state_sds, batch_sds)
+        meta = {"kind": "train", "microbatches": tcfg.microbatches}
+    elif shape.kind == "prefill":
+        batch_sds = input_specs(cfg, shape)
+        batch_sh = jax.tree.map(
+            lambda l: NamedSharding(
+                mesh, SH.batch_pspec(mesh, l.shape[0], len(l.shape))),
+            batch_sds)
+        q_block = overrides.get("q_block", 512)
+
+        def prefill(params, batch):
+            logits, _ = M.forward(params, batch, cfg, q_block=q_block,
+                                  moe_impl=overrides.get("moe_impl", "dense"),
+                                  unroll=unroll, mlstm_chunk=mlstm_chunk)
+            return logits[:, -1]
+
+        with mesh:
+            jitted = jax.jit(
+                prefill, in_shardings=(param_sh, batch_sh),
+                out_shardings=NamedSharding(mesh, P(dp, None)))
+            lowered = jitted.lower(params_sds, batch_sds)
+        meta = {"kind": "prefill"}
+    else:  # decode
+        B = shape.global_batch
+        cache_len = min(shape.seq_len,
+                        overrides.get("max_cache", shape.seq_len))
+        kv_dtype = overrides.get("kv_dtype", "bf16")
+        gqa_impl = overrides.get("gqa_impl", "repeat")
+        state_sds = jax.eval_shape(
+            lambda: M.init_decode_state(cfg, B, cache_len, kv_dtype=kv_dtype))
+        state_sh = SH.cache_shardings(state_sds, mesh, B)
+        tok_sds = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        tok_sh = {"tokens": NamedSharding(mesh,
+                                          SH.batch_pspec(mesh, B, 2))}
+
+        def serve_step(params, state, batch):
+            return M.decode_step(params, state, batch["tokens"], cfg,
+                                 moe_impl=overrides.get("moe_impl", "dense"),
+                                 unroll=unroll, gqa_impl=gqa_impl)
+
+        with mesh:
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(param_sh, state_sh, tok_sh),
+                out_shardings=(NamedSharding(mesh, P(None, "model")),
+                               state_sh),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params_sds, state_sds, tok_sds)
+        meta = {"kind": "decode", "cache_len": cache_len}
+    meta.update(arch=arch, shape=shape_name, n_layers=cfg.n_layers,
+                mesh="2x16x16" if multi_pod else "16x16")
+    return lowered, meta
+
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*(.+?)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(")
+SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|pred|s64|u64|f64)"
+                      r"\[([0-9,]*)\]")
+DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum output-shape bytes of collective ops in post-SPMD HLO.
+
+    Shapes in the partitioned module are per-device, so the totals feed
+    the per-chip collective roofline term directly.  ``-done`` halves of
+    async pairs are skipped to avoid double counting.
+    """
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        nbytes = 0
+        for dm in SHAPE_RE.finditer(m.group(1)):
+            dims = [int(x) for x in dm.group(2).split(",") if x]
+            n = 1
+            for d in dims:
+                n *= d
+            nbytes += n * DTYPE_BYTES[dm.group(1)]
+        out[kind] = out.get(kind, 0) + nbytes
+    return out
+
+
+def analyze(lowered, compiled) -> Dict[str, Any]:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    cost = cost or {}
+    flops = float(cost.get("flops", 0.0))
+    byt = float(cost.get("bytes accessed", 0.0))
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception as e:  # memory analysis unsupported on some backends
+        mem_info = {"error": str(e)}
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": flops, "bytes": byt, "memory": mem_info,
+            "collectives": coll,
+            "collective_bytes_total": float(sum(coll.values()))}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             overrides=None, verbose: bool = True) -> Dict[str, Any]:
+    t0 = time.time()
+    lowered, meta = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                               overrides=overrides)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    if verbose:  # the dry-run contract: prove it fits, expose the costs
+        print(f"[{arch} {shape_name}] memory_analysis:",
+              _memory_summary(compiled))
+        print(f"[{arch} {shape_name}] cost_analysis:",
+              _cost_summary(compiled))
+    info = analyze(lowered, compiled)
+    info.update(meta)
+    info["lower_seconds"] = round(t1 - t0, 2)
+    info["compile_seconds"] = round(t2 - t1, 2)
+    return info
+
+
+def _memory_summary(compiled) -> str:
+    try:
+        m = compiled.memory_analysis()
+        return (f"peak={getattr(m, 'peak_memory_in_bytes', None)} "
+                f"args={getattr(m, 'argument_size_in_bytes', None)} "
+                f"out={getattr(m, 'output_size_in_bytes', None)} "
+                f"temp={getattr(m, 'temp_size_in_bytes', None)} (per device)")
+    except Exception as e:
+        return f"<unavailable: {e}>"
+
+
+def _cost_summary(compiled) -> str:
+    c = compiled.cost_analysis()
+    if isinstance(c, (list, tuple)):
+        c = c[0] if c else {}
+    c = c or {}
+    return (f"flops={c.get('flops', 0):.4g} "
+            f"bytes_accessed={c.get('bytes accessed', 0):.4g} "
+            f"(per device; scan bodies counted once — see "
+            f"benchmarks/roofline.py for trip-corrected totals)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--moe-impl", default="dense")
+    ap.add_argument("--q-block", type=int, default=512)
+    args = ap.parse_args()
+
+    overrides = {"moe_impl": args.moe_impl, "q_block": args.q_block}
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        cells = [(args.arch.replace("-", "_"), args.shape)]
+
+    meshes = [False, True] if (args.both_meshes or args.all) else \
+        [args.multi_pod]
+    results = []
+    for arch, shape in cells:
+        cfg = get_config(arch)
+        ok, why = cell_supported(cfg, SHAPES[shape])
+        if not ok:
+            results.append({"arch": arch, "shape": shape, "skipped": why})
+            print(f"SKIP  {arch:24s} {shape:12s} {why}")
+            continue
+        for mp in meshes:
+            tag = "2x16x16" if mp else "16x16"
+            try:
+                info = run_cell(arch, shape, multi_pod=mp,
+                                overrides=overrides)
+                results.append(info)
+                print(f"OK    {arch:24s} {shape:12s} {tag:8s} "
+                      f"flops={info['flops']:.3e} bytes={info['bytes']:.3e} "
+                      f"coll={info['collective_bytes_total']:.3e} "
+                      f"compile={info['compile_seconds']}s")
+            except Exception as e:
+                results.append({"arch": arch, "shape": shape, "mesh": tag,
+                                "error": str(e)[:500]})
+                print(f"FAIL  {arch:24s} {shape:12s} {tag:8s} {e}",
+                      file=sys.stderr)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    n_fail = sum(1 for r in results if "error" in r)
+    print(f"\n{len(results)} cells, {n_fail} failures")
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

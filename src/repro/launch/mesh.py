@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+A function (not a module constant) so importing never touches jax device
+state — required for the dry-run's 512-placeholder-device trick.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh needs {n} devices, found {len(devices)} — run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 (dry-run) "
+            "or on a real pod slice")
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_smoke_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many devices exist (tests on CPU)."""
+    import jax
+
+    devices = jax.devices()
+    n = data * model
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(devices[:n]).reshape(data, model),
+                ("data", "model"))

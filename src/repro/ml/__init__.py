@@ -1,0 +1,28 @@
+"""Host-side trainers (the paper's Model Trainer component)."""
+from .tree import DecisionTreeClassifier, XGBRegressionTree
+from .forest import RandomForestClassifier, XGBoostClassifier, IsolationForest
+from .linear import LinearSVM, PCA, Autoencoder
+from .bayes import CategoricalNB
+from .neighbors import KMeans, KNeighborsClassifier
+from .bnn import BinarizedMLP, bits_pm1
+
+MODEL_REGISTRY = {
+    "dt": DecisionTreeClassifier,
+    "rf": RandomForestClassifier,
+    "xgb": XGBoostClassifier,
+    "iforest": IsolationForest,
+    "svm": LinearSVM,
+    "nb": CategoricalNB,
+    "kmeans": KMeans,
+    "knn": KNeighborsClassifier,
+    "pca": PCA,
+    "ae": Autoencoder,
+    "bnn": BinarizedMLP,
+}
+
+__all__ = [
+    "DecisionTreeClassifier", "XGBRegressionTree", "RandomForestClassifier",
+    "XGBoostClassifier", "IsolationForest", "LinearSVM", "PCA", "Autoencoder",
+    "CategoricalNB", "KMeans", "KNeighborsClassifier", "BinarizedMLP",
+    "bits_pm1", "MODEL_REGISTRY",
+]

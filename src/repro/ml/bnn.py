@@ -1,0 +1,127 @@
+"""Binarized MLP (XNOR-net style) trained in JAX with straight-through grads.
+
+Inputs are integer features expanded to their binary representation and
+mapped to ±1 bits (the N3IC/toNIC convention).  With ±1 weights and ±1
+activations, ``x @ w == 2*popcount(XNOR(x,w)) - n`` — so the trained model
+deploys exactly as the paper's Eq. 8 pipeline.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["BinarizedMLP", "bits_pm1"]
+
+
+def bits_pm1(X: np.ndarray, in_bits: int) -> np.ndarray:
+    """Expand int features [B, F] -> ±1 bit matrix [B, F*in_bits]."""
+    X = np.asarray(X, np.int64)
+    shifts = np.arange(in_bits)
+    bits = (X[..., None] >> shifts) & 1  # [B, F, in_bits]
+    return (bits * 2 - 1).reshape(X.shape[0], -1).astype(np.float32)
+
+
+@jax.custom_vjp
+def _sign_ste(x):
+    return jnp.sign(jnp.where(x == 0, 1.0, x))
+
+
+def _sign_fwd(x):
+    return _sign_ste(x), x
+
+
+def _sign_bwd(x, g):
+    return (g * (jnp.abs(x) <= 1.0),)  # hard-tanh STE
+
+
+_sign_ste.defvjp(_sign_fwd, _sign_bwd)
+
+
+class BinarizedMLP:
+    def __init__(self, hidden=(16,), in_bits=8, lr=0.01, epochs=50,
+                 batch_size=100, seed=0):
+        self.hidden = tuple(hidden)
+        self.in_bits = in_bits
+        self.lr = lr
+        self.epochs = epochs
+        self.batch_size = batch_size
+        self.seed = seed
+        self.weights_: List[np.ndarray] = []  # real-valued master weights
+        self.n_classes_ = 0
+
+    def _forward(self, params, xb):
+        h = xb
+        for i, w in enumerate(params):
+            wb = _sign_ste(w)
+            h = h @ wb
+            if i < len(params) - 1:
+                h = _sign_ste(h)
+        return h  # logits (un-activated popcount scores, per paper §4.3.3)
+
+    def fit(self, X, y):
+        y = np.asarray(y, np.int64)
+        K = self.n_classes_ = int(y.max()) + 1
+        Xb = bits_pm1(X, self.in_bits)
+        dims = [Xb.shape[1], *self.hidden, K]
+        rng = np.random.default_rng(self.seed)
+        params = [
+            jnp.asarray(rng.normal(0, 0.5, (dims[i], dims[i + 1])), jnp.float32)
+            for i in range(len(dims) - 1)
+        ]
+        opt_m = [jnp.zeros_like(p) for p in params]
+        opt_v = [jnp.zeros_like(p) for p in params]
+
+        def loss_fn(params, xb, yb):
+            logits = self._forward(params, xb)
+            # popcount-scale logits saturate softmax; temperature by fan-in
+            logits = logits / jnp.sqrt(float(dims[-2]))
+            logp = jax.nn.log_softmax(logits)
+            return -logp[jnp.arange(len(yb)), yb].mean()
+
+        @jax.jit
+        def step(params, m, v, xb, yb, t):
+            g = jax.grad(loss_fn)(params, xb, yb)
+            b1, b2, eps = 0.9, 0.999, 1e-8
+            new_p, new_m, new_v = [], [], []
+            for p, gi, mi, vi in zip(params, g, m, v):
+                mi = b1 * mi + (1 - b1) * gi
+                vi = b2 * vi + (1 - b2) * gi * gi
+                mhat = mi / (1 - b1**t)
+                vhat = vi / (1 - b2**t)
+                p = p - self.lr * mhat / (jnp.sqrt(vhat) + eps)
+                p = jnp.clip(p, -1.5, 1.5)
+                new_p.append(p)
+                new_m.append(mi)
+                new_v.append(vi)
+            return new_p, new_m, new_v
+
+        n = len(Xb)
+        t = 0
+        for ep in range(self.epochs):
+            order = rng.permutation(n)
+            for i in range(0, n, self.batch_size):
+                idx = order[i : i + self.batch_size]
+                t += 1
+                params, opt_m, opt_v = step(
+                    params, opt_m, opt_v, jnp.asarray(Xb[idx]),
+                    jnp.asarray(y[idx]), t
+                )
+        self.weights_ = [np.asarray(p) for p in params]
+        return self
+
+    def binary_weights(self) -> List[np.ndarray]:
+        """±1 weight matrices as deployed."""
+        return [np.where(w >= 0, 1, -1).astype(np.int8) for w in self.weights_]
+
+    def predict(self, X):
+        Xb = bits_pm1(X, self.in_bits)
+        h = Xb
+        ws = self.binary_weights()
+        for i, w in enumerate(ws):
+            h = h @ w.astype(np.float32)
+            if i < len(ws) - 1:
+                h = np.where(h >= 0, 1.0, -1.0)
+        return h.argmax(axis=1)

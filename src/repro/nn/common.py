@@ -1,0 +1,74 @@
+"""Shared NN primitives: norms, RoPE, initializers, dtype policy.
+
+Parameters are plain dict pytrees.  Weights are stored f32 (master) and
+cast to the compute dtype inside the forward pass (mixed precision).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_COMPUTE_DTYPE = jnp.bfloat16
+
+
+def cast(x, dtype):
+    return x.astype(dtype) if x.dtype != dtype else x
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [..., S, H, hd]; positions [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    angles = angles[..., None, :]  # [..., S, 1, hd/2] broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense_init(key, shape, in_axis=0) -> jax.Array:
+    fan_in = shape[in_axis]
+    return jax.random.normal(key, shape, jnp.float32) / np.sqrt(fan_in)
+
+
+def embed_init(key, shape) -> jax.Array:
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+ACTIVATIONS = {"silu": jax.nn.silu, "gelu": gelu, "relu": jax.nn.relu}

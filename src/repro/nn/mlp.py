@@ -1,0 +1,25 @@
+"""Gated MLP (SwiGLU / GeGLU) blocks."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .common import ACTIVATIONS, dense_init, split_keys
+
+
+def init_mlp(key, d_model: int, d_ff: int) -> Dict:
+    k = split_keys(key, 3)
+    return {
+        "w_gate": dense_init(k[0], (d_model, d_ff)),
+        "w_up": dense_init(k[1], (d_model, d_ff)),
+        "w_down": dense_init(k[2], (d_ff, d_model)),
+    }
+
+
+def mlp_block(p: Dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    dt = x.dtype
+    fn = ACTIVATIONS[act]
+    h = fn(x @ p["w_gate"].astype(dt)) * (x @ p["w_up"].astype(dt))
+    return h @ p["w_down"].astype(dt)

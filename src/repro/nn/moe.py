@@ -1,0 +1,140 @@
+"""Mixture-of-Experts layer: top-k routing, stacked experts, shared experts.
+
+Experts live as stacked tensors [E, d_model, d_ff] so the expert dimension
+shards over the 'model' mesh axis (expert parallelism).  Dispatch/combine
+uses dense one-hot einsums — the standard TPU-friendly formulation (no
+dynamic scatter), with a capacity-free approximation: every token's top-k
+weights are kept exactly, experts compute all tokens masked by routing
+weight.  A ``router_noise``-free deterministic router keeps dry-runs and
+tests reproducible.  Load-balancing aux loss follows Switch/GShard.
+
+Expert padding: archs whose expert count doesn't divide the mesh axis
+(qwen2-moe: 60) pad to ``n_experts_padded`` with dead experts; the router
+logits for pads are masked to -inf, so they never receive tokens.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ACTIVATIONS, dense_init, split_keys
+
+
+def init_moe(key, d_model: int, moe_d_ff: int, n_experts_padded: int,
+             n_shared: int, shared_d_ff: int) -> Dict:
+    k = split_keys(key, 5)
+    E = n_experts_padded
+    p = {
+        "router": dense_init(k[0], (d_model, E)),
+        "w_gate": dense_init(k[1], (E, d_model, moe_d_ff)) ,
+        "w_up": dense_init(k[2], (E, d_model, moe_d_ff)),
+        "w_down": dense_init(k[3], (E, moe_d_ff, d_model)),
+    }
+    if n_shared > 0:
+        ks = split_keys(k[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(ks[0], (d_model, shared_d_ff)),
+            "w_up": dense_init(ks[1], (d_model, shared_d_ff)),
+            "w_down": dense_init(ks[2], (shared_d_ff, d_model)),
+        }
+    return p
+
+
+def moe_block(
+    p: Dict,
+    x: jax.Array,  # [B, S, D]
+    *,
+    n_experts: int,  # real experts (<= padded)
+    top_k: int,
+    act: str = "silu",
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output [B,S,D], aux_loss [])."""
+    dt = x.dtype
+    fn = ACTIVATIONS[act]
+    B, S, D = x.shape
+    E = p["router"].shape[1]
+    logits = (x @ p["router"].astype(dt)).astype(jnp.float32)  # [B,S,E]
+    if n_experts < E:  # mask padding experts
+        pad_mask = jnp.arange(E) >= n_experts
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(gates, top_k)  # [B,S,k]
+    top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+    # combine weights [B,S,E]: scatter top-k back densely via one-hot
+    combine = (jax.nn.one_hot(top_idx, E, dtype=jnp.float32)
+               * top_vals[..., None]).sum(axis=2)
+    # aux load-balance loss (Switch): E * sum_e f_e * P_e
+    density = (combine > 0).astype(jnp.float32).mean(axis=(0, 1))  # f_e
+    router_prob = gates.mean(axis=(0, 1))  # P_e
+    aux = E * jnp.sum(density * router_prob)
+    # expert compute over all tokens (dense dispatch, EP shards E)
+    h_gate = jnp.einsum("bsd,edf->bsef", x, p["w_gate"].astype(dt))
+    h_up = jnp.einsum("bsd,edf->bsef", x, p["w_up"].astype(dt))
+    h = fn(h_gate) * h_up
+    expert_out = jnp.einsum("bsef,efd->bsed", h, p["w_down"].astype(dt))
+    out = jnp.einsum("bsed,bse->bsd", expert_out,
+                     combine.astype(dt))
+    if "shared" in p:
+        sp = p["shared"]
+        hs = fn(x @ sp["w_gate"].astype(dt)) * (x @ sp["w_up"].astype(dt))
+        out = out + hs @ sp["w_down"].astype(dt)
+    return out, aux
+
+
+def moe_block_sparse(
+    p: Dict,
+    x: jax.Array,
+    *,
+    n_experts: int,
+    top_k: int,
+    act: str = "silu",
+    capacity_factor: float = 1.25,
+) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-based dispatch (GShard): tokens -> expert buffers.
+
+    FLOP-proportional to k/E (vs dense ``moe_block`` computing all E per
+    token).  Used by the perf-optimized path; see EXPERIMENTS.md §Perf.
+    """
+    dt = x.dtype
+    fn = ACTIVATIONS[act]
+    B, S, D = x.shape
+    E = p["router"].shape[1]
+    N = B * S
+    xf = x.reshape(N, D)
+    logits = (xf @ p["router"].astype(dt)).astype(jnp.float32)
+    if n_experts < E:
+        logits = jnp.where(jnp.arange(E)[None] >= n_experts, -1e30, logits)
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(gates, top_k)  # [N,k]
+    top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+    cap = int(capacity_factor * N * top_k / E)
+    cap = max(cap, 1)
+    # position of each (token, slot) within its expert buffer
+    flat_idx = top_idx.reshape(-1)  # [N*k]
+    onehot = jax.nn.one_hot(flat_idx, E, dtype=jnp.int32)  # [N*k, E]
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - 1)  # [N*k, E]
+    pos = jnp.take_along_axis(pos_in_expert, flat_idx[:, None], axis=1)[:, 0]
+    keep = pos < cap
+    # dispatch: build expert buffers [E, cap, D]
+    buf = jnp.zeros((E, cap, D), dt)
+    tok_ids = jnp.repeat(jnp.arange(N), top_k)
+    buf = buf.at[flat_idx, jnp.where(keep, pos, 0)].add(
+        jnp.where(keep[:, None], xf[tok_ids], 0).astype(dt))
+    # expert FFN on buffers
+    h = fn(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(dt)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(dt))
+    eo = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dt))
+    # combine back
+    gathered = eo[flat_idx, jnp.where(keep, pos, 0)]  # [N*k, D]
+    w = (top_vals.reshape(-1) * keep).astype(dt)
+    outf = jnp.zeros((N, D), dt).at[tok_ids].add(gathered * w[:, None])
+    out = outf.reshape(B, S, D)
+    density = jnp.zeros(E, jnp.float32).at[flat_idx].add(keep / N)
+    aux = E * jnp.sum(density / top_k * gates.mean(axis=0))
+    if "shared" in p:
+        sp = p["shared"]
+        hs = fn(x @ sp["w_gate"].astype(dt)) * (x @ sp["w_up"].astype(dt))
+        out = out + hs @ sp["w_down"].astype(dt)
+    return out, aux

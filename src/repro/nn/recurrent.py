@@ -1,0 +1,308 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin), mLSTM + sLSTM (xLSTM).
+
+Training/prefill run the parallel forms (associative scan for RG-LRU,
+stabilized quadratic form for mLSTM, lax.scan for sLSTM's true hidden
+recurrence); decode carries O(1) state — which is why these archs run the
+``long_500k`` shape that full-attention archs skip.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import dense_init, split_keys
+
+# ------------------------------------------------------------------ RG-LRU
+RGLRU_C = 8.0
+
+
+def init_rglru(key, d_model: int, d_rnn: int, conv_width: int = 4) -> Dict:
+    k = split_keys(key, 6)
+    return {
+        "w_lin": dense_init(k[0], (d_model, d_rnn)),
+        "w_gate": dense_init(k[1], (d_model, d_rnn)),
+        "w_out": dense_init(k[2], (d_rnn, d_model)),
+        "w_rec_gate": dense_init(k[3], (d_rnn, d_rnn)),
+        "w_in_gate": dense_init(k[4], (d_rnn, d_rnn)),
+        "lam": jnp.linspace(0.9, 0.999, d_rnn).astype(jnp.float32),  # Λ
+        "conv": dense_init(k[5], (conv_width, d_rnn)) * 0.1,
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv along time.  x [B,S,R], w [W,R]."""
+    W = w.shape[0]
+    pads = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):  # small static width
+        out = out + pads[:, i : i + x.shape[1], :] * w[i][None, None, :]
+    return out
+
+
+def _rglru_coeffs(p: Dict, u: jax.Array):
+    """u [B,S,R] (post-conv branch). Returns (a, b) of h_t = a h + b."""
+    r = jax.nn.sigmoid(u @ p["w_rec_gate"].astype(u.dtype))
+    i = jax.nn.sigmoid(u @ p["w_in_gate"].astype(u.dtype))
+    log_a = (-RGLRU_C * jax.nn.softplus(-jnp.log(p["lam"] /
+             (1 - p["lam"])))).astype(jnp.float32)  # base log a < 0
+    log_a = log_a[None, None, :] * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1 - jnp.exp(2 * log_a), 1e-6)) * (
+        i.astype(jnp.float32) * u.astype(jnp.float32))
+    return a, b
+
+
+def rglru_block(p: Dict, x: jax.Array) -> jax.Array:
+    """Griffin recurrent block over a full sequence."""
+    dt = x.dtype
+    u = x @ p["w_lin"].astype(dt)
+    u = _causal_conv(u, p["conv"].astype(dt))
+    a, b = _rglru_coeffs(p, u)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(dt))
+    return (h.astype(dt) * gate) @ p["w_out"].astype(dt)
+
+
+def rglru_decode(p: Dict, x: jax.Array, state: Dict) -> Tuple[jax.Array, Dict]:
+    """x [B,1,D]; state {h [B,R] f32, conv [B,W-1,R]}."""
+    dt = x.dtype
+    u_t = (x @ p["w_lin"].astype(dt))  # [B,1,R]
+    W = p["conv"].shape[0]
+    hist = jnp.concatenate([state["conv"], u_t.astype(jnp.float32)], axis=1)
+    u_c = (hist * p["conv"].astype(jnp.float32)[None]).sum(axis=1,
+                                                           keepdims=True)
+    a, b = _rglru_coeffs(p, u_c.astype(dt))
+    h = a[:, 0] * state["h"] + b[:, 0]
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(dt))
+    out = (h[:, None, :].astype(dt) * gate) @ p["w_out"].astype(dt)
+    return out, {"h": h, "conv": hist[:, 1:]}
+
+
+def rglru_init_state(batch: int, d_rnn: int, conv_width: int = 4) -> Dict:
+    return {
+        "h": jnp.zeros((batch, d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, d_rnn), jnp.float32),
+    }
+
+
+# ------------------------------------------------------------------ mLSTM
+def init_mlstm(key, d_model: int, n_heads: int) -> Dict:
+    k = split_keys(key, 8)
+    return {
+        "wq": dense_init(k[0], (d_model, d_model)),
+        "wk": dense_init(k[1], (d_model, d_model)),
+        "wv": dense_init(k[2], (d_model, d_model)),
+        "w_i": dense_init(k[3], (d_model, n_heads)) * 0.1,
+        "w_f": dense_init(k[4], (d_model, n_heads)) * 0.1,
+        "b_f": jnp.full((n_heads,), 3.0, jnp.float32),  # open forget gates
+        "w_gate": dense_init(k[5], (d_model, d_model)),
+        "w_out": dense_init(k[6], (d_model, d_model)),
+        "conv": dense_init(k[7], (4, d_model)) * 0.1,
+    }
+
+
+MLSTM_CHUNK = 256
+
+
+def mlstm_block(p: Dict, x: jax.Array, n_heads: int,
+                chunk: int = MLSTM_CHUNK) -> jax.Array:
+    """Chunkwise-parallel stabilized mLSTM (TPU adaptation).
+
+    The paper-form parallel mLSTM materializes an S×S decay matrix; we
+    instead scan over chunks of width ``chunk`` carrying the (C, n, m)
+    recurrent state between chunks — intra-chunk quadratic (W×W in VMEM
+    scale), inter-chunk linear.  Exactly equal to the recurrent form.
+    """
+    dt = x.dtype
+    B, S, D = x.shape
+    hd = D // n_heads
+    W = min(chunk, S)
+    pad = (-S) % W
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    u = _causal_conv(x, p["conv"].astype(dt)) + x
+    q = (u @ p["wq"].astype(dt)).reshape(B, Sp, n_heads, hd)
+    k = (u @ p["wk"].astype(dt)).reshape(B, Sp, n_heads, hd)
+    v = (x @ p["wv"].astype(dt)).reshape(B, Sp, n_heads, hd)
+    log_i = (u @ p["w_i"].astype(dt)).astype(jnp.float32)  # [B,Sp,H]
+    log_f = jax.nn.log_sigmoid(
+        (u @ p["w_f"].astype(dt)).astype(jnp.float32) + p["b_f"][None, None])
+
+    nc = Sp // W
+
+    def to_chunks(t):  # [B,Sp,...] -> [nc,B,W,...]
+        return t.reshape(B, nc, W, *t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    lic, lfc = to_chunks(log_i), to_chunks(log_f)
+    scale = 1.0 / np.sqrt(hd)
+    intra_mask = jnp.tril(jnp.ones((W, W), bool))
+
+    def body(carry, blk):
+        C, n, m = carry  # [B,H,hd,hd], [B,H,hd], [B,H]
+        qi, ki, vi, li, lf = blk
+        L = jnp.cumsum(lf, axis=1)  # [B,W,H] within-chunk decay
+        # per-query stabilizer: max(state decay, intra max)
+        intra = L[:, :, None, :] - L[:, None, :, :] + li[:, None, :, :]
+        intra = jnp.where(intra_mask[None, :, :, None], intra, -jnp.inf)
+        intra_max = intra.max(axis=2)  # [B,W,H]
+        state_decay = L + m[:, None, :]  # [B,W,H]
+        m_q = jnp.maximum(state_decay, intra_max)
+        a = jnp.exp(state_decay - m_q)  # state weight per query
+        wgt = jnp.exp(intra - m_q[:, :, None, :])  # [B,W(i),W(j),H]
+        qf = qi.astype(jnp.float32) * scale
+        kf = ki.astype(jnp.float32)
+        vf = vi.astype(jnp.float32)
+        qk = jnp.einsum("bihd,bjhd->bijh", qf, kf)
+        s = wgt * qk
+        num = jnp.einsum("bijh,bjhd->bihd", s, vf) + \
+            a[..., None] * jnp.einsum("bhkv,bihk->bihv", C, qf)
+        den = s.sum(axis=2) + a * jnp.einsum("bhk,bihk->bih", n, qf)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_q))
+        h = num / den[..., None]  # [B,W,H,hd]
+        # state update to end of chunk
+        Lw = L[:, -1]  # [B,H]
+        m_new = jnp.maximum(m + Lw, (Lw[:, None] - L + li).max(axis=1))
+        kw = jnp.exp(Lw[:, None] - L + li - m_new[:, None])  # [B,W,H]
+        C_new = jnp.exp(m + Lw - m_new)[..., None, None] * C + \
+            jnp.einsum("bjh,bjhk,bjhv->bhkv", kw, kf, vf)
+        n_new = jnp.exp(m + Lw - m_new)[..., None] * n + \
+            jnp.einsum("bjh,bjhk->bhk", kw, kf)
+        return (C_new, n_new, m_new), h
+
+    C0 = jnp.zeros((B, n_heads, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, n_heads, hd), jnp.float32)
+    m0 = jnp.full((B, n_heads), -1e30, jnp.float32)
+    _, hs = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, lic, lfc))
+    h = hs.swapaxes(0, 1).reshape(B, Sp, D)[:, :S].astype(dt)
+    x = x[:, :S]
+    gate = jax.nn.silu(x @ p["w_gate"].astype(dt))
+    return (h * gate) @ p["w_out"].astype(dt)
+
+
+def mlstm_init_state(batch: int, n_heads: int, hd: int) -> Dict:
+    return {
+        "C": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, hd), jnp.float32),
+        "m": jnp.full((batch, n_heads), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, 3, n_heads * hd), jnp.float32),
+    }
+
+
+def mlstm_decode(p: Dict, x: jax.Array, state: Dict,
+                 n_heads: int) -> Tuple[jax.Array, Dict]:
+    dt = x.dtype
+    B, _, D = x.shape
+    hd = D // n_heads
+    hist = jnp.concatenate(
+        [state["conv"], x[:, 0, :].astype(jnp.float32)[:, None]], axis=1)
+    u = (hist * p["conv"].astype(jnp.float32)[None]).sum(axis=1) + \
+        x[:, 0].astype(jnp.float32)
+    u = u.astype(dt)
+    q = (u @ p["wq"].astype(dt)).reshape(B, n_heads, hd).astype(jnp.float32)
+    k = (u @ p["wk"].astype(dt)).reshape(B, n_heads, hd).astype(jnp.float32)
+    v = (x[:, 0] @ p["wv"].astype(dt)).reshape(B, n_heads, hd).astype(
+        jnp.float32)
+    log_i = (u @ p["w_i"].astype(dt)).astype(jnp.float32)  # [B,H]
+    log_f = jax.nn.log_sigmoid(
+        (u @ p["w_f"].astype(dt)).astype(jnp.float32) + p["b_f"][None])
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    fprime = jnp.exp(log_f + state["m"] - m_new)
+    iprime = jnp.exp(log_i - m_new)
+    C = fprime[..., None, None] * state["C"] + \
+        iprime[..., None, None] * k[..., :, None] * v[..., None, :]
+    n = fprime[..., None] * state["n"] + iprime[..., None] * k
+    num = jnp.einsum("bhkv,bhk->bhv", C, q / np.sqrt(hd))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q / np.sqrt(hd))),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, D).astype(dt)
+    gate = jax.nn.silu(x[:, 0] @ p["w_gate"].astype(dt))
+    out = ((h * gate) @ p["w_out"].astype(dt))[:, None, :]
+    return out, {"C": C, "n": n, "m": m_new, "conv": hist[:, 1:]}
+
+
+# ------------------------------------------------------------------ sLSTM
+def init_slstm(key, d_model: int, n_heads: int) -> Dict:
+    hd = d_model // n_heads
+    k = split_keys(key, 3)
+    # fused gate projections: input (4 gates) and recurrent (4 gates,
+    # block-diagonal per head)
+    return {
+        "w_gates": dense_init(k[0], (d_model, 4 * d_model)),
+        "r_gates": dense_init(k[1], (n_heads, hd, 4 * hd)) * 0.5,
+        "b_gates": jnp.concatenate([
+            jnp.zeros(d_model), jnp.full(d_model, 3.0),  # i, f biases
+            jnp.zeros(2 * d_model)]).astype(jnp.float32),
+        "w_out": dense_init(k[2], (d_model, d_model)),
+    }
+
+
+def slstm_block(p: Dict, x: jax.Array, n_heads: int) -> jax.Array:
+    """True hidden-state recurrence -> sequential lax.scan over time."""
+    dt = x.dtype
+    B, S, D = x.shape
+    hd = D // n_heads
+    wx = (x @ p["w_gates"].astype(dt)).astype(jnp.float32)  # [B,S,4D]
+
+    def step(carry, wx_t):
+        c, n, m, h = carry  # all [B,H,hd] except m [B,H,hd]
+        rec = jnp.einsum("bhd,hdk->bhk", h, p["r_gates"].astype(jnp.float32))
+        z = wx_t.reshape(B, 4, n_heads, hd).transpose(0, 2, 1, 3)  # [B,H,4,hd]
+        rec = rec.reshape(B, n_heads, 4, hd)
+        b = p["b_gates"].reshape(4, n_heads, hd).transpose(1, 0, 2)
+        g = z + rec + b[None]
+        log_i = g[:, :, 0]
+        log_f = jax.nn.log_sigmoid(g[:, :, 1])
+        zin = jnp.tanh(g[:, :, 2])
+        o = jax.nn.sigmoid(g[:, :, 3])
+        m_new = jnp.maximum(log_f + m, log_i)
+        ip = jnp.exp(log_i - m_new)
+        fp = jnp.exp(log_f + m - m_new)
+        c = fp * c + ip * zin
+        n = fp * n + ip
+        h = o * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new, h), h
+
+    zeros = jnp.zeros((B, n_heads, hd), jnp.float32)
+    carry = (zeros, zeros, jnp.full((B, n_heads, hd), -1e30), zeros)
+    _, hs = jax.lax.scan(step, carry, wx.transpose(1, 0, 2))  # [S,B,H,hd]
+    hs = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(dt)
+    return hs @ p["w_out"].astype(dt)
+
+
+def slstm_init_state(batch: int, n_heads: int, hd: int) -> Dict:
+    z = jnp.zeros((batch, n_heads, hd), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, n_heads, hd), -1e30), "h": z}
+
+
+def slstm_decode(p: Dict, x: jax.Array, state: Dict,
+                 n_heads: int) -> Tuple[jax.Array, Dict]:
+    dt = x.dtype
+    B, _, D = x.shape
+    hd = D // n_heads
+    wx = (x[:, 0] @ p["w_gates"].astype(dt)).astype(jnp.float32)
+    rec = jnp.einsum("bhd,hdk->bhk", state["h"],
+                     p["r_gates"].astype(jnp.float32)).reshape(B, n_heads, 4, hd)
+    z = wx.reshape(B, 4, n_heads, hd).transpose(0, 2, 1, 3)
+    b = p["b_gates"].reshape(4, n_heads, hd).transpose(1, 0, 2)
+    g = z + rec + b[None]
+    log_i, zin, o = g[:, :, 0], jnp.tanh(g[:, :, 2]), jax.nn.sigmoid(g[:, :, 3])
+    log_f = jax.nn.log_sigmoid(g[:, :, 1])
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    ip = jnp.exp(log_i - m_new)
+    fp = jnp.exp(log_f + state["m"] - m_new)
+    c = fp * state["c"] + ip * zin
+    n = fp * state["n"] + ip
+    h = o * c / jnp.maximum(n, 1.0)
+    out = (h.reshape(B, D).astype(dt) @ p["w_out"].astype(dt))[:, None, :]
+    return out, {"c": c, "n": n, "m": m_new, "h": h}

@@ -1,0 +1,159 @@
+"""Serving engine: prefill/decode with an inline Planter gate.
+
+The paper's deployment story is ML *coexisting* with the switch's
+mandatory function at line rate (switch.p4 + ML, §7.3/Fig. 16).  Here the
+mandatory function is LM decoding; the Planter-mapped classifier runs on
+the request stream *inside the same jitted step* (``fused_step``), so
+admission control costs no extra dispatch and its FLOPs/bytes are visible
+in the step's cost analysis (benchmarks/coexist.py measures exactly the
+paper's relative-latency experiment).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..arch import model as M
+from ..arch.config import ArchConfig
+from ..core.pipeline import MappedModel
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    cache_len: int = 256
+    gate_action_drop: int = 1  # gate label that means "drop request"
+
+
+class ServeEngine:
+    """Batched decode with optional inline Planter admission gate."""
+
+    def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig,
+                 gate: Optional[MappedModel] = None,
+                 gate_backend: str = "jnp"):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.gate_fn = gate.jax_predict(gate_backend) if gate else None
+        self.state = M.init_decode_state(cfg, scfg.max_batch, scfg.cache_len)
+        self._step = jax.jit(
+            lambda p, s, t: M.decode_step(p, s, t, cfg))
+        if self.gate_fn is not None:
+            gate_fn = self.gate_fn
+
+            def fused(p, s, t, feats):
+                labels = gate_fn(feats)
+                logits, s = M.decode_step(p, s, t, cfg)
+                return logits, s, labels
+
+            self._fused = jax.jit(fused)
+        else:
+            self._fused = None
+
+    # ------------------------------------------------------------ admission
+    def admit(self, features: np.ndarray) -> np.ndarray:
+        """Planter gate on request features -> keep mask (True = admit)."""
+        if self.gate_fn is None:
+            return np.ones(len(features), bool)
+        labels = np.asarray(self.gate_fn(jnp.asarray(features)))
+        return labels != self.scfg.gate_action_drop
+
+    # --------------------------------------------------------------- decode
+    def step(self, tokens: np.ndarray,
+             features: Optional[np.ndarray] = None):
+        """One decode step for the whole batch; gate fused when present."""
+        t = jnp.asarray(tokens)
+        if self._fused is not None and features is not None:
+            logits, self.state, labels = self._fused(
+                self.params, self.state, t, jnp.asarray(features))
+            return np.asarray(logits), np.asarray(labels)
+        logits, self.state = self._step(self.params, self.state, t)
+        return np.asarray(logits), None
+
+    def generate(self, prompts: np.ndarray, n_tokens: int,
+                 features: Optional[np.ndarray] = None) -> np.ndarray:
+        """Greedy generation; prompts [B, P] seed the cache token by token."""
+        B, P = prompts.shape
+        assert B == self.scfg.max_batch
+        out = []
+        tok = prompts[:, :1]
+        for i in range(P + n_tokens - 1):
+            logits, _ = self.step(tok, features)
+            nxt = np.asarray(logits.argmax(axis=-1))[:, None]
+            tok = prompts[:, i + 1: i + 2] if i + 1 < P else nxt
+            if i + 1 >= P:
+                out.append(nxt)
+        return np.concatenate(out, axis=1) if out else np.zeros((B, 0), int)
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching over a ServeEngine.
+
+    The fleet-scale serving pattern: a fixed decode batch of ``max_batch``
+    slots; finished sequences release their slot, the admission gate
+    filters the waiting queue, and freed slots refill immediately — no
+    global drain between requests.  Per-slot position bookkeeping keeps
+    one shared cache (slot i writes its own rows; sequences are
+    left-aligned since every slot starts at its admission step, which is
+    sufficient for throughput accounting and tested for isolation).
+    """
+
+    def __init__(self, engine: ServeEngine, eos_token: int = 0,
+                 max_tokens: int = 32):
+        self.engine = engine
+        self.eos = eos_token
+        self.max_tokens = max_tokens
+        B = engine.scfg.max_batch
+        self.slot_free = np.ones(B, bool)
+        self.slot_tokens: list = [[] for _ in range(B)]
+        self.slot_req: list = [None] * B
+        self.queue: list = []  # (request_id, prompt_token, features)
+        self.done: dict = {}
+        self.dropped: list = []
+
+    def submit(self, request_id, prompt_token: int,
+               features: Optional[np.ndarray] = None):
+        if features is not None:
+            keep = self.engine.admit(features[None])[0]
+            if not keep:
+                self.dropped.append(request_id)
+                return False
+        self.queue.append((request_id, prompt_token))
+        return True
+
+    def _fill_slots(self):
+        for b in np.where(self.slot_free)[0]:
+            if not self.queue:
+                break
+            rid, tok = self.queue.pop(0)
+            self.slot_free[b] = False
+            self.slot_req[b] = rid
+            self.slot_tokens[b] = [tok]
+
+    def run(self, max_steps: int = 1000) -> dict:
+        """Decode until queue + slots drain; returns {request_id: tokens}."""
+        B = self.engine.scfg.max_batch
+        for _ in range(max_steps):
+            self._fill_slots()
+            if self.slot_free.all() and not self.queue:
+                break
+            tok = np.array([
+                self.slot_tokens[b][-1] if not self.slot_free[b] else 0
+                for b in range(B)], np.int32)[:, None]
+            logits, _ = self.engine.step(tok)
+            nxt = np.asarray(logits.argmax(axis=-1))
+            for b in range(B):
+                if self.slot_free[b]:
+                    continue
+                self.slot_tokens[b].append(int(nxt[b]))
+                seq = self.slot_tokens[b]
+                if (len(seq) - 1 >= self.max_tokens
+                        or int(nxt[b]) == self.eos):
+                    self.done[self.slot_req[b]] = seq[1:]
+                    self.slot_free[b] = True
+                    self.slot_req[b] = None
+        return self.done

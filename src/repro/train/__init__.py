@@ -1,0 +1,4 @@
+from . import optimizer
+from .step import TrainConfig, init_train_state, make_train_step
+
+__all__ = ["TrainConfig", "init_train_state", "make_train_step", "optimizer"]

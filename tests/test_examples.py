@@ -1,0 +1,31 @@
+"""The runnable examples must actually run (subprocess smoke)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+
+
+@pytest.mark.parametrize("script,needle", [
+    ("examples/quickstart.py", "bit-exact"),
+    ("examples/finance_lowlatency.py", "mid-price"),
+    ("examples/anomaly_gate_serving.py", "admitted"),
+    ("examples/moe_router_distill.py", "distilled"),
+])
+def test_example_runs(script, needle):
+    r = subprocess.run([sys.executable, script], env=ENV, cwd=REPO,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert needle in r.stdout
+
+
+def test_train_lm_short(tmp_path):
+    r = subprocess.run(
+        [sys.executable, "examples/train_lm.py", "--steps", "6",
+         "--ckpt-dir", str(tmp_path / "ck")],
+        env=ENV, cwd=REPO, capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "final loss" in r.stdout

@@ -1,0 +1,105 @@
+"""§Perf levers must preserve semantics: grouped GQA, int8 KV, padding,
+sparse MoE, remat policies."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.arch import model as M
+from repro.configs import get_smoke_config
+
+
+def _decode_seq(cfg, params, toks, **kw):
+    kv_dtype = kw.pop("kv_dtype", "bf16")
+    state = M.init_decode_state(cfg, toks.shape[0], toks.shape[1],
+                                kv_dtype=kv_dtype)
+    step = jax.jit(lambda p, s, t: M.decode_step(p, s, t, cfg, **kw))
+    out = []
+    for t in range(toks.shape[1]):
+        lg, state = step(params, state, toks[:, t: t + 1])
+        out.append(lg)
+    return jnp.stack(out, 1)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_smoke_config("qwen3_32b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 8)))
+    return cfg, params, toks
+
+
+def test_grouped_gqa_bit_exact(qwen):
+    cfg, params, toks = qwen
+    a = _decode_seq(cfg, params, toks, gqa_impl="repeat")
+    b = _decode_seq(cfg, params, toks, gqa_impl="grouped")
+    assert float(jnp.max(jnp.abs(a - b))) == 0.0
+
+
+def test_int8_kv_cache_close(qwen):
+    cfg, params, toks = qwen
+    a = _decode_seq(cfg, params, toks, gqa_impl="grouped")
+    b = _decode_seq(cfg, params, toks, gqa_impl="grouped", kv_dtype="int8")
+    scale = float(jnp.max(jnp.abs(a)))
+    assert float(jnp.max(jnp.abs(a - b))) < 0.05 * scale
+
+
+def test_pad_q_heads_exact():
+    """Zero-padded query heads change nothing (embedded-weights check)."""
+    cfg = get_smoke_config("minitron_4b")  # 3 heads -> pads to 16
+    cfgp = dataclasses.replace(cfg, pad_q_heads=True)
+    assert cfgp.q_heads == 16
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    pp = M.init_params(cfgp, jax.random.PRNGKey(1))
+
+    def embed(dp, du):
+        for k in du:
+            if isinstance(du[k], dict):
+                embed(dp[k], du[k])
+            elif isinstance(du[k], list):
+                for i in range(len(du[k])):
+                    embed(dp[k][i], du[k][i])
+            elif dp[k].shape == du[k].shape:
+                dp[k] = du[k]
+            else:
+                sl = tuple(slice(0, s) for s in du[k].shape)
+                dp[k] = jnp.zeros_like(dp[k]).at[sl].set(du[k])
+        return dp
+
+    pp = embed(pp, params)
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 12)))}
+    a, _ = M.forward(params, batch, cfg)
+    b, _ = M.forward(pp, batch, cfgp)
+    assert float(jnp.max(jnp.abs(a - b))) < 1e-2
+
+
+def test_sparse_moe_close_to_dense():
+    """Capacity dispatch == dense combine when capacity is ample."""
+    from repro.nn.moe import init_moe, moe_block, moe_block_sparse
+    D, F, E = 16, 32, 8
+    p = init_moe(jax.random.PRNGKey(0), D, F, E, 0, 0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, D)) * 0.3
+    dense, _ = moe_block(p, x, n_experts=E, top_k=2)
+    sparse, _ = moe_block_sparse(p, x, n_experts=E, top_k=2,
+                                 capacity_factor=8.0)
+    assert float(jnp.max(jnp.abs(dense - sparse))) < 1e-4
+
+
+def test_remat_policies_same_loss():
+    from repro.train.step import TrainConfig, make_train_step
+    from repro.train import optimizer as OPT
+    cfg = get_smoke_config("qwen2_1_5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(1).integers(0, cfg.vocab_size, (4, 16)))}
+    losses = []
+    for pol in ("full", "dots", "none"):
+        tcfg = TrainConfig(microbatches=1, q_block=16, remat_policy=pol)
+        state = {"opt": OPT.init(params), "step": jnp.zeros((), jnp.int32)}
+        _, _, loss = jax.jit(make_train_step(cfg, tcfg))(params, state, batch)
+        losses.append(float(loss))
+    assert max(losses) - min(losses) < 1e-2, losses

@@ -1,0 +1,154 @@
+"""Multi-device integration: GPipe correctness + dry-run cells.
+
+These need >1 XLA device, so they run as subprocesses that set
+``--xla_force_host_platform_device_count`` before jax initializes.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, devices: int = 8, timeout: int = 900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={devices}")
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + ":" + REPO
+    return subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True,
+        text=True, timeout=timeout, cwd=REPO)
+
+
+def test_gpipe_loss_matches_plain_forward():
+    """Pipeline loss == plain loss on a tiny dense model over 2 pods."""
+    code = textwrap.dedent("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.configs import get_smoke_config
+        from repro.arch import model as M
+        from repro.dist import sharding as SH, pipeline as PP
+
+        cfg = get_smoke_config("qwen3_32b")  # 2 layers -> 2 stages
+        mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(2, 2, 2),
+                    ("pod", "data", "model"))
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        toks = jnp.asarray(np.random.default_rng(0).integers(
+            0, cfg.vocab_size, (8, 16)))
+        batch = {"tokens": toks}
+
+        # plain (non-pipelined) reference loss: pure next-token CE
+        logits, _ = M.forward(params, batch, cfg, q_block=16)
+        logp = jax.nn.log_softmax(logits[:, :-1])
+        ref = float(-jnp.take_along_axis(
+            logp, toks[:, 1:][..., None], axis=-1).mean())
+
+        pspecs = SH.param_pspecs(params, mesh)
+        staged = PP.split_layers_for_stages(params, 2)
+        step, staged_specs = PP.make_pipeline_step(cfg, mesh, pspecs,
+                                                   n_micro=4, q_block=16)
+        sh = jax.tree.map(lambda s: NamedSharding(mesh, s), staged_specs)
+        with mesh:
+            jitted = jax.jit(step, in_shardings=(
+                sh, {"tokens": NamedSharding(mesh, P())}))
+            loss, grads = jitted(staged, batch)
+        loss = float(loss)
+        assert abs(loss - ref) < 0.05 * abs(ref), (loss, ref)
+        g_norm = sum(float(jnp.abs(g).sum()) for g in jax.tree.leaves(grads))
+        assert g_norm > 0
+        print("PIPELINE_OK", loss, ref)
+    """)
+    r = _run(code, devices=8)
+    assert "PIPELINE_OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.parametrize("arch,shape", [("xlstm-125m", "decode_32k"),
+                                        ("qwen2-1.5b", "train_4k")])
+def test_dryrun_cell_compiles(arch, shape):
+    """The dry-run deliverable: lower+compile on the production mesh."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape],
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        capture_output=True, text=True, timeout=1200, cwd=REPO)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
+
+
+def test_dryrun_multipod_cell_compiles():
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "recurrentgemma-9b", "--shape", "long_500k", "--multi-pod"],
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        capture_output=True, text=True, timeout=1200, cwd=REPO)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_elastic_remesh_restore_continues_training():
+    """Fault-tolerance end-to-end: train on a 1×2 mesh, checkpoint, restore
+    onto a 2×2 mesh (elastic scale-up), continue — loss stream must keep
+    descending and params must match bit-for-bit at the handoff."""
+    code = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp, tempfile
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.configs import get_smoke_config
+        from repro.arch import model as M
+        from repro.dist import sharding as SH
+        from repro.train import optimizer as OPT
+        from repro.train.step import TrainConfig, make_train_step
+        from repro.ckpt.manager import CheckpointManager
+        from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+
+        cfg = get_smoke_config("qwen2_1_5b")
+        tcfg = TrainConfig(microbatches=2, q_block=16,
+                           adamw=OPT.AdamWConfig(lr=2e-3, warmup_steps=2))
+        pipe = TokenPipeline(TokenPipelineConfig(
+            vocab_size=cfg.vocab_size, seq_len=32, global_batch=8, seed=0))
+        ckdir = tempfile.mkdtemp()
+        mgr = CheckpointManager(ckdir, keep=2)
+        step_fn = make_train_step(cfg, tcfg)
+
+        def run(mesh, params, state, start, n):
+            psh = SH.param_shardings(params, mesh)
+            losses = []
+            with mesh:
+                jitted = jax.jit(step_fn)
+                for s in range(start, start + n):
+                    batch = {k: jnp.asarray(v)
+                             for k, v in pipe.batch_at(s).items()}
+                    params, state, loss = jitted(params, state, batch)
+                    losses.append(float(loss))
+            return params, state, losses
+
+        devs = np.asarray(jax.devices())
+        mesh_a = Mesh(devs[:2].reshape(1, 2), ("data", "model"))
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        state = {"opt": OPT.init(params), "step": jnp.zeros((), jnp.int32)}
+        params, state, l1 = run(mesh_a, params, state, 0, 6)
+        mgr.save(6, {"params": params, "state": state})
+
+        # elastic scale-up: restore the same checkpoint onto a 2x2 mesh
+        mesh_b = Mesh(devs[:4].reshape(2, 2), ("data", "model"))
+        tgt = {"params": params, "state": state}
+        sh = {"params": SH.param_shardings(params, mesh_b),
+              "state": {"opt": OPT.AdamWState(
+                            m=SH.param_shardings(params, mesh_b),
+                            v=SH.param_shardings(params, mesh_b),
+                            count=NamedSharding(mesh_b, P())),
+                        "step": NamedSharding(mesh_b, P())}}
+        restored = mgr.restore(6, tgt, shardings=sh)
+        # bit-exact handoff
+        for a, b in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(restored["params"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        p2, s2, l2 = run(mesh_b, restored["params"], restored["state"], 6, 6)
+        assert np.mean(l2) < np.mean(l1), (l1, l2)  # still descending
+        print("ELASTIC_OK", np.mean(l1), np.mean(l2))
+    """)
+    r = _run(code, devices=8, timeout=900)
+    assert "ELASTIC_OK" in r.stdout, r.stdout + r.stderr

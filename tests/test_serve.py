@@ -1,0 +1,78 @@
+"""Serving integration: gate admission, fused step, generation."""
+import jax
+import numpy as np
+import pytest
+
+from repro.arch import model as M
+from repro.configs import get_smoke_config
+from repro.core import PlanterConfig, plant
+from repro.data import load_dataset
+from repro.serve.engine import ServeConfig, ServeEngine
+
+DS = load_dataset("unsw", n=2000)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_smoke_config("qwen2_1_5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    res = plant(PlanterConfig(model="rf", size="S"), DS.X_train, DS.y_train,
+                DS.X_test)
+    return ServeEngine(cfg, params, ServeConfig(max_batch=4, cache_len=32),
+                       gate=res.mapped), res
+
+
+def test_gate_admission(engine):
+    eng, res = engine
+    keep = eng.admit(DS.X_test[:128])
+    # gate decisions == the mapped model's decisions
+    labels = np.asarray(res.mapped.predict(DS.X_test[:128]))
+    np.testing.assert_array_equal(keep, labels != 1)
+    assert 0 < keep.sum() < 128  # both classes present
+
+
+def test_fused_step_labels_match_gate(engine):
+    eng, res = engine
+    toks = np.zeros((4, 1), np.int32)
+    feats = DS.X_test[:4]
+    logits, labels = eng.step(toks, feats)
+    np.testing.assert_array_equal(
+        np.asarray(labels), np.asarray(res.mapped.predict(feats)))
+    assert logits.shape == (4, eng.cfg.vocab_padded)
+
+
+def test_generate_shapes(engine):
+    eng, _ = engine
+    eng.state = M.init_decode_state(eng.cfg, 4, 32)  # reset cache
+    prompts = np.ones((4, 3), np.int64)
+    out = eng.generate(prompts, n_tokens=5, features=DS.X_test[:4])
+    assert out.shape == (4, 5)
+    assert (out >= 0).all() and (out < eng.cfg.vocab_padded).all()
+
+
+def test_greedy_determinism(engine):
+    eng, _ = engine
+    eng.state = M.init_decode_state(eng.cfg, 4, 32)
+    prompts = np.ones((4, 3), np.int64)
+    a = eng.generate(prompts, 4, features=DS.X_test[:4])
+    eng.state = M.init_decode_state(eng.cfg, 4, 32)
+    b = eng.generate(prompts, 4, features=DS.X_test[:4])
+    np.testing.assert_array_equal(a, b)
+
+
+def test_continuous_batching_drains_queue(engine):
+    from repro.serve.engine import ContinuousBatcher
+    eng, _ = engine
+    eng.state = M.init_decode_state(eng.cfg, 4, 32)
+    cb = ContinuousBatcher(eng, eos_token=-1, max_tokens=4)
+    rng = np.random.default_rng(0)
+    n_submitted = 0
+    for rid in range(10):  # 10 requests through 4 slots
+        feats = DS.X_test[rid]
+        if cb.submit(rid, int(rng.integers(1, 100)), features=feats):
+            n_submitted += 1
+    done = cb.run(max_steps=200)
+    assert len(done) == n_submitted
+    assert len(cb.dropped) == 10 - n_submitted
+    for rid, toks in done.items():
+        assert 1 <= len(toks) <= 5

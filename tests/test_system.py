@@ -1,0 +1,78 @@
+"""End-to-end behaviour tests for the paper's system (Planter workflow).
+
+The paper's claim set: one-click train->map->deploy, mapped accuracy ==
+native accuracy (same size), log-NB beats the joint-table baseline, EB
+trades entries for stages vs DM, quantization converges with action bits.
+"""
+import numpy as np
+import pytest
+
+from repro.core import DEFAULT_STRATEGY, PlanterConfig, plant
+from repro.data import load_dataset
+
+DS = load_dataset("cicids", n=2500)
+
+
+def test_one_click_workflow_all_models():
+    """Paper Fig. 2: every supported model maps via its Table-2 default."""
+    for model, strategy in DEFAULT_STRATEGY.items():
+        cfg = PlanterConfig(model=model, size="S")
+        if model == "bnn":
+            cfg.train_params = dict(epochs=2)
+        y = None if model in ("kmeans", "pca", "ae") else DS.y_train
+        res = plant(cfg, DS.X_train, y, DS.X_test)
+        assert res.mapped.strategy == strategy
+        r = res.mapped.resources()
+        assert r.stages >= 1
+        if not np.isnan(res.parity):
+            assert res.parity > 0.5, (model, res.parity)
+
+
+def test_framework_runtime_under_10s():
+    """Paper §7.2: small-model train+convert < 10 s (excl. SVM/NN/AE)."""
+    for model in ("dt", "rf", "xgb", "nb", "kmeans", "knn", "pca"):
+        cfg = PlanterConfig(model=model, size="S")
+        y = None if model in ("kmeans", "pca") else DS.y_train
+        res = plant(cfg, DS.X_train, y, None)
+        assert res.train_seconds + res.convert_seconds < 10.0, model
+
+
+def test_model_size_gradient():
+    """S -> L grows the converted model (paper Table 6 scaling)."""
+    entries = []
+    for size in ("S", "L"):
+        res = plant(PlanterConfig(model="rf", size=size), DS.X_train,
+                    DS.y_train, None)
+        entries.append(res.mapped.resources().entries)
+    assert entries[0] < entries[1]
+
+
+def test_eb_vs_dm_tradeoff():
+    """Paper Fig. 12: EB fewer stages / more entries; DM the reverse."""
+    eb = plant(PlanterConfig(model="rf", strategy="eb", size="M"),
+               DS.X_train, DS.y_train, None).mapped.resources()
+    dm = plant(PlanterConfig(model="rf", strategy="dm", size="M"),
+               DS.X_train, DS.y_train, None).mapped.resources()
+    assert eb.stages < dm.stages
+    assert eb.entries > dm.entries
+
+
+def test_nb_log_upgrade_entry_reduction():
+    """Paper Fig. 14a: log-domain NB vs IIsy joint-table baseline."""
+    from repro.core.lookup_based import map_nb_joint_baseline
+    res = plant(PlanterConfig(model="nb", size="S"), DS.X_train, DS.y_train,
+                None)
+    upgraded = res.mapped.resources().entries
+    baseline = map_nb_joint_baseline(res.trained, DS.X_train.shape[1], 8)
+    assert upgraded < baseline / 1e6  # 1280 vs 2^40
+
+
+def test_action_bits_relative_accuracy():
+    """Paper Fig. 11: more action bits -> parity approaches 1."""
+    parities = []
+    for bits in (4, 8, 16):
+        res = plant(PlanterConfig(model="nb", size="S", action_bits=bits),
+                    DS.X_train, DS.y_train, DS.X_test)
+        parities.append(res.parity)
+    assert parities[-1] >= parities[0]
+    assert parities[-1] > 0.95

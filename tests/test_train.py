@@ -1,0 +1,113 @@
+"""Training-loop behaviour: loss goes down, compression, optimizer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.arch import model as M
+from repro.configs import get_smoke_config
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+from repro.dist import compress as C
+from repro.train import optimizer as OPT
+from repro.train.step import TrainConfig, make_train_step
+
+
+def _run(arch="qwen2_1_5b", steps=25, compress=False, seed=0, lr=3e-3):
+    cfg = get_smoke_config(arch)
+    tcfg = TrainConfig(
+        microbatches=2, compress_grads=compress, q_block=32,
+        adamw=OPT.AdamWConfig(lr=lr, warmup_steps=3, total_steps=steps))
+    pipe = TokenPipeline(TokenPipelineConfig(
+        vocab_size=cfg.vocab_size, seq_len=32, global_batch=8, seed=seed))
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    state = {"opt": OPT.init(params), "step": jnp.zeros((), jnp.int32)}
+    if compress:
+        state["err"] = C.init_error_state(params)
+    step = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0, 1))
+    losses = []
+    for s in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(s).items()}
+        params, state, loss = step(params, state, batch)
+        losses.append(float(loss))
+    return losses
+
+
+def test_loss_decreases():
+    losses = _run()
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1, losses
+
+
+def test_loss_decreases_with_compression():
+    """Int8 + error feedback must not break convergence (§Perf trick)."""
+    losses = _run(compress=True)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1, losses
+
+
+def test_compression_error_feedback_unbiased():
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(0, 1, (64, 64)),
+                          jnp.float32)}
+    err = C.init_error_state(g)
+    total_true = np.zeros((64, 64))
+    total_deq = np.zeros((64, 64))
+    for _ in range(50):
+        deq, err = C.compress_grads(g, err)
+        total_true += np.asarray(g["w"])
+        total_deq += np.asarray(deq["w"])
+    # accumulated dequantized gradient tracks the true sum (error feedback)
+    rel = np.abs(total_deq - total_true).max() / np.abs(total_true).max()
+    assert rel < 0.01, rel
+
+
+def test_adamw_schedule():
+    cfg = OPT.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_frac=0.1)
+    assert float(OPT.schedule(cfg, jnp.int32(0))) == 0.0
+    assert abs(float(OPT.schedule(cfg, jnp.int32(10))) - 1.0) < 1e-6
+    assert float(OPT.schedule(cfg, jnp.int32(100))) == pytest.approx(0.1,
+                                                                     rel=1e-3)
+
+
+def test_microbatch_equivalence():
+    """1 vs 4 microbatches: same gradient step (accumulation is exact)."""
+    cfg = get_smoke_config("qwen2_1_5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    pipe = TokenPipeline(TokenPipelineConfig(
+        vocab_size=cfg.vocab_size, seq_len=16, global_batch=8, seed=1))
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+    outs = []
+    for m in (1, 4):
+        tcfg = TrainConfig(microbatches=m, q_block=16,
+                           adamw=OPT.AdamWConfig(lr=1e-3, warmup_steps=0))
+        state = {"opt": OPT.init(params), "step": jnp.zeros((), jnp.int32)}
+        p2, _, loss = jax.jit(make_train_step(cfg, tcfg))(
+            params, state, batch)
+        outs.append((float(loss), p2))
+    assert outs[0][0] == pytest.approx(outs[1][0], rel=2e-2)
+    deltas = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                          outs[0][1], outs[1][1])
+    assert max(jax.tree.leaves(deltas)) < 5e-2
+
+
+def test_bf16_momentum_converges():
+    """8-bit-Adam-lite (§Perf iter. 10): bf16 m must not break training."""
+    import jax
+    from repro.arch import model as MM
+    from repro.configs import get_smoke_config as gsc
+    cfg = gsc("qwen2_1_5b")
+    tcfg = TrainConfig(
+        microbatches=2, q_block=32,
+        adamw=OPT.AdamWConfig(lr=3e-3, warmup_steps=3, total_steps=25,
+                              m_dtype="bf16"))
+    pipe = TokenPipeline(TokenPipelineConfig(
+        vocab_size=cfg.vocab_size, seq_len=32, global_batch=8, seed=0))
+    params = MM.init_params(cfg, jax.random.PRNGKey(0))
+    state = {"opt": OPT.init(params, tcfg.adamw),
+             "step": jnp.zeros((), jnp.int32)}
+    assert state["opt"].m["head"].dtype == jnp.bfloat16
+    step = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0, 1))
+    losses = []
+    for s in range(25):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(s).items()}
+        params, state, loss = step(params, state, batch)
+        losses.append(float(loss))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1, losses
