@@ -1,0 +1,98 @@
+"""Distribution-substrate overhead: compressed vs uncompressed train step.
+
+Times the jitted train step with and without error-feedback int8 gradient
+compression (repro.dist.compress) on a smoke config, and reports the
+achieved wire-compression ratio.  The compression math runs fully inside
+the step, so the wall-time delta *is* the quantize/dequantize cost; on a
+real fleet the payoff side is 4× fewer reduce-scatter bytes (see the
+collective term in benchmarks/roofline.py).
+
+    PYTHONPATH=src:. python -m benchmarks.dist_overhead --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+from repro.dist import compress as C
+from repro.arch import model as M
+from repro.train import optimizer as OPT
+from repro.train.step import TrainConfig, make_train_step
+
+from .common import emit
+
+
+def _time_steps(step, params, state, pipe, n_steps: int) -> float:
+    """Median-ish per-step wall time (first step = compile, excluded)."""
+    times = []
+    for s in range(n_steps + 1):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(s).items()}
+        t0 = time.perf_counter()
+        params, state, loss = step(params, state, batch)
+        jax.block_until_ready(loss)
+        times.append(time.perf_counter() - t0)
+    times = sorted(times[1:])  # drop compile step
+    return times[len(times) // 2]
+
+
+def run(arch: str = "qwen2_1_5b", steps: int = 10, seq: int = 64,
+        batch: int = 8) -> Dict:
+    cfg = get_smoke_config(arch)
+    pipe = TokenPipeline(TokenPipelineConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq, global_batch=batch, seed=0))
+    key = jax.random.PRNGKey(0)
+
+    rows = {}
+    for compress in (False, True):
+        tcfg = TrainConfig(
+            microbatches=2, compress_grads=compress, q_block=min(512, seq),
+            adamw=OPT.AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=steps))
+        params = M.init_params(cfg, key)
+        state = {"opt": OPT.init(params), "step": jnp.zeros((), jnp.int32)}
+        if compress:
+            state["err"] = C.init_error_state(params)
+        step = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0, 1))
+        rows[compress] = _time_steps(step, params, state, pipe, steps)
+
+    params_sds = jax.eval_shape(lambda: M.init_params(cfg, key))
+    record = {
+        "name": "dist_overhead",
+        "arch": arch,
+        "seq": seq,
+        "batch": batch,
+        "step_ms_base": rows[False] * 1e3,
+        "step_ms_compressed": rows[True] * 1e3,
+        "overhead_pct": 100.0 * (rows[True] - rows[False]) / rows[False],
+        "compression_ratio": C.compression_ratio(params_sds),
+    }
+    return record
+
+
+def main(quick: bool = True, out: str = "dist_overhead.json",
+         print_json: bool = False) -> Dict:
+    record = run(steps=5 if quick else 25)
+    with open(out, "w") as f:
+        json.dump(record, f, indent=1)
+    if print_json:  # CLI mode; run.py's CSV stream stays emit()-only
+        print(json.dumps(record))
+    emit("dist_overhead/step_base", record["step_ms_base"] * 1e3,
+         f"ratio={record['compression_ratio']:.2f}")
+    emit("dist_overhead/step_compressed", record["step_ms_compressed"] * 1e3,
+         f"overhead_pct={record['overhead_pct']:.1f}")
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="few steps, smoke config (CI mode)")
+    ap.add_argument("--out", default="dist_overhead.json")
+    args = ap.parse_args()
+    main(quick=args.smoke, out=args.out, print_json=True)

@@ -54,6 +54,17 @@ def roofline_table(path="roofline_baseline.json") -> List[str]:
     return out
 
 
+def dist_overhead_table(path="dist_overhead.json") -> List[str]:
+    r = json.load(open(path))
+    return [
+        "| arch | step ms (base) | step ms (int8+EF) | overhead | wire ratio |",
+        "|---|---|---|---|---|",
+        f"| {r['arch']} | {r['step_ms_base']:.1f} "
+        f"| {r['step_ms_compressed']:.1f} | {r['overhead_pct']:.1f}% "
+        f"| {r['compression_ratio']:.2f}× |",
+    ]
+
+
 def hillclimb_table(paths=("hillclimb_results.json", "hillclimb_extra.json",
                            "hillclimb_extra2.json", "hillclimb_extra3.json",
                            "hillclimb_extra4.json")) -> List[str]:
@@ -81,3 +92,8 @@ if __name__ == "__main__":
     print("\n".join(roofline_table()))
     print()
     print("\n".join(hillclimb_table()))
+    try:
+        print()
+        print("\n".join(dist_overhead_table()))
+    except FileNotFoundError:
+        pass

@@ -16,12 +16,12 @@ def main() -> None:
     quick = not args.full
 
     from . import (accuracy_parity, action_bits, coexist, convert_time,
-                   scalability, throughput, upgrades)
+                   dist_overhead, scalability, throughput, upgrades)
 
     print("name,us_per_call,derived")
     failures = []
     for mod in (accuracy_parity, convert_time, action_bits, scalability,
-                upgrades, throughput, coexist):
+                upgrades, throughput, coexist, dist_overhead):
         try:
             mod.main(quick=quick)
         except Exception as e:  # keep the suite going; report at the end

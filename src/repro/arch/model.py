@@ -317,10 +317,33 @@ def forward(params, batch, cfg: ArchConfig, *, moe_impl: str = "dense",
                                   moe_impl, q_block, unroll=unroll,
                                   mlstm_chunk=mlstm_chunk,
                                   remat_policy=remat_policy)
-    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
-    logits = jnp.einsum("bsd,dv->bsv", x, params["head"].astype(x.dtype),
-                        preferred_element_type=jnp.float32)
+    logits = lm_head(params, x, cfg.norm_eps)
     return logits, jnp.asarray(aux, jnp.float32)
+
+
+def lm_head(params, x, norm_eps: float) -> jax.Array:
+    """Final norm + vocab projection — the one LM-head implementation,
+    shared by forward, decode_step and the pipelined step."""
+    x = rms_norm(x, params["ln_f"], norm_eps)
+    return jnp.einsum("bsd,dv->bsv", x, params["head"].astype(x.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+def token_ce_loss(logits, tokens, aux=0.0) -> jax.Array:
+    """Next-token CE + z-loss (+ MoE aux) from full-sequence logits.
+
+    The single source of the training objective's tail — shared by the
+    plain train step and the pipelined step (repro.dist.pipeline), so
+    the two can never drift apart.
+    """
+    targets = tokens[:, 1:]
+    logits = logits[:, :-1]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    z = jax.scipy.special.logsumexp(logits, axis=-1)
+    zloss = 1e-4 * (z ** 2)
+    return nll.mean() + zloss.mean() + \
+        MOE_AUX_WEIGHT * jnp.asarray(aux, jnp.float32)
 
 
 def loss_fn(params, batch, cfg: ArchConfig, *, moe_impl: str = "dense",
@@ -335,13 +358,7 @@ def loss_fn(params, batch, cfg: ArchConfig, *, moe_impl: str = "dense",
         # frontends are stubs; vlm logits include patch positions — slice
         if cfg.family == "vlm" and cfg.frontend_seq:
             logits = logits[:, batch["patches"].shape[1]:]
-    targets = batch["tokens"][:, 1:]
-    logits = logits[:, :-1]
-    logp = jax.nn.log_softmax(logits, axis=-1)
-    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
-    z = jax.scipy.special.logsumexp(logits, axis=-1)
-    zloss = 1e-4 * (z ** 2)
-    return nll.mean() + zloss.mean() + MOE_AUX_WEIGHT * aux
+    return token_ce_loss(logits, batch["tokens"], aux)
 
 
 # ------------------------------------------------------------- decoding
@@ -547,7 +564,5 @@ def decode_step(params, state, tokens, cfg: ArchConfig, *,
             new_state[key] = nc
             x, _ = _ffn(params["tail"][i], cfg, x, moe_impl)
 
-    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
-    logits = jnp.einsum("bsd,dv->bsv", x, params["head"].astype(x.dtype),
-                        preferred_element_type=jnp.float32)
+    logits = lm_head(params, x, cfg.norm_eps)
     return logits[:, 0], new_state

@@ -1,0 +1,17 @@
+"""Distribution substrate: the scale layer between models and meshes.
+
+Four orthogonal pieces, each consumed by train/launch/serve:
+
+* :mod:`~repro.dist.sharding` — mesh-aware partition-spec derivation for
+  params, batches and decode caches (Megatron-style TP + DP, expert
+  parallelism, sequence-sharded KV caches);
+* :mod:`~repro.dist.compress` — error-feedback int8 gradient compression
+  (jit-safe, runs inside the train step);
+* :mod:`~repro.dist.stragglers` — straggler detection, elastic mesh
+  replanning and SIGTERM preemption handling;
+* :mod:`~repro.dist.pipeline` — GPipe-style pipeline parallelism over the
+  stacked transformer layers.
+"""
+from . import compress, pipeline, sharding, stragglers
+
+__all__ = ["compress", "pipeline", "sharding", "stragglers"]

@@ -1,0 +1,66 @@
+"""Error-feedback int8 gradient compression (1-bit-Adam family, EF-SGD).
+
+Each gradient leaf is quantized to int8 with a per-tensor absmax scale;
+the quantization residual is carried in an f32 error accumulator and
+added back before the next quantization.  The telescoping sum makes the
+scheme *lossless in the limit*: over K steps the accumulated dequantized
+gradient equals the true gradient sum up to a single step's quantization
+error (|Σ deq − Σ g| = |e_K| ≤ scale), so momentum-based optimizers see
+an unbiased long-run gradient.
+
+On a real fleet the int8 payload is what crosses the wire (4× fewer
+reduce-scatter bytes — the collective-roofline term in the dry-run);
+here compress→dequantize runs inside the jitted SPMD step, so the whole
+path is trace-safe by construction: no python branching on values, no
+host sync.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_EPS = 1e-20
+_QMAX = 127.0
+
+
+def init_error_state(params) -> Any:
+    """Zero f32 error accumulators mirroring the parameter tree."""
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _compress_leaf(g: jax.Array, e: jax.Array):
+    x = g.astype(jnp.float32) + e
+    scale = jnp.maximum(jnp.max(jnp.abs(x)) / _QMAX, _EPS)
+    q = jnp.clip(jnp.round(x / scale), -_QMAX, _QMAX).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, x - deq
+
+
+def compress_grads(grads, err) -> Tuple[Any, Any]:
+    """Quantize+dequantize every gradient leaf with error feedback.
+
+    Returns ``(dequantized_grads, new_err)``; both trees mirror ``grads``.
+    Jit-safe — called from inside the jitted train step.
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    err_leaves = treedef.flatten_up_to(err)
+    pairs = [_compress_leaf(g, e) for g, e in zip(leaves, err_leaves)]
+    deq = jax.tree.unflatten(treedef, [d for d, _ in pairs])
+    new_err = jax.tree.unflatten(treedef, [e for _, e in pairs])
+    return deq, new_err
+
+
+def compression_ratio(grads) -> float:
+    """Wire-bytes ratio of f32 gradients vs int8 payload + f32 scales.
+
+    Shape-only arithmetic: works on concrete arrays and on
+    ``jax.eval_shape`` stand-ins alike.
+    """
+    sizes = [int(np.prod(leaf.shape)) for leaf in jax.tree.leaves(grads)]
+    f32 = sum(s * 4 for s in sizes)
+    q = sum(s * 1 + 4 for s in sizes)
+    return f32 / max(q, 1)

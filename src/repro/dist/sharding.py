@@ -1,0 +1,201 @@
+"""Mesh-aware partition-spec derivation for params, batches and caches.
+
+The rules are Megatron-flavoured and *name-driven* — they key off the
+leaf names the model builders use (``wq``/``wo``/``w_down``/…), so one
+rule table covers every assigned family (dense, GQA, MoE, recurrent,
+enc-dec, VLM):
+
+* column-parallel projections shard their output dim over ``model``;
+* row-parallel projections (``wo``/``w_down``/``w_out``) shard their
+  input dim over ``model``;
+* the embedding shards the (256-padded) vocab, the LM head its vocab
+  output dim;
+* MoE expert stacks ``[E, D, F]`` shard the expert dim over ``model``
+  (expert parallelism; ``E`` is padded to a multiple of 16);
+* stacked-layer leading dims (``layers``/``macros``/``enc_layers``/
+  ``cross_layers``) are scan axes and never shard;
+* every proposal is validated against the mesh: an axis that does not
+  divide the dim is dropped (replicated), so specs are safe for any mesh
+  from the 1×2 CPU smoke mesh to the 16×16 production pod.
+
+A ``pod`` super-axis, when present, folds into data parallelism:
+``batch_pspec`` returns ``P(("pod", "data"), ...)``.
+
+Works with abstract mesh stand-ins too: only ``mesh.axis_names`` and
+``mesh.shape`` are consulted until a ``NamedSharding`` is built.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+MODEL_AXIS = "model"
+
+# roots whose first array dim is a lax.scan layer stack (never sharded)
+_STACKED_ROOTS = ("layers", "macros", "enc_layers", "cross_layers")
+
+# output-dim ("column") parallel projections: shard the last dim
+_COL_PARALLEL = {
+    "wq", "wk", "wv", "w_gate", "w_up", "w_lin", "w_rec_gate", "w_in_gate",
+    "w_i", "w_f", "w_gates", "r_gates", "router", "conv", "frontend_proj",
+    "embed_proj",
+}
+# input-dim ("row") parallel projections: shard the first dim
+_ROW_PARALLEL = {"wo", "w_down", "w_out"}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([int(mesh.shape[a]) for a in axis]))
+    return int(mesh.shape[axis])
+
+
+def data_axis(mesh):
+    """The (possibly compound) data-parallel axis: pod folds into data."""
+    if "pod" in tuple(mesh.axis_names):
+        return ("pod", "data")
+    return "data"
+
+
+def _validated(shape: Sequence[int], axes: Sequence[Any], mesh) -> P:
+    """Drop any proposed axis that does not divide its dim."""
+    out = []
+    for dim, ax in zip(shape, axes):
+        if ax is not None and dim % _axis_size(mesh, ax) == 0 and dim > 0:
+            out.append(ax)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# ------------------------------------------------------------------ params
+def param_spec(path, leaf, mesh) -> P:
+    """PartitionSpec for one parameter leaf (path from tree_map_with_path)."""
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    shape = tuple(leaf.shape)
+    ndim = len(shape)
+    if ndim == 0:
+        return P()
+
+    lead = 1 if (names and names[0] in _STACKED_ROOTS and ndim > 1) else 0
+    core = shape[lead:]
+    axes: Tuple[Any, ...] = tuple(None for _ in core)
+
+    if name == "embed" and ndim == 2:
+        axes = (MODEL_AXIS, None)  # vocab rows (256-padded -> always even)
+    elif name == "head" and ndim == 2:
+        axes = (None, MODEL_AXIS)  # vocab columns
+    elif ("moe" in names and "shared" not in names
+          and name in ("w_gate", "w_up", "w_down") and len(core) == 3):
+        axes = (MODEL_AXIS, None, None)  # expert parallelism over [E, ., .]
+    elif name in _ROW_PARALLEL and len(core) == 2:
+        axes = (MODEL_AXIS, None)
+    elif name in _COL_PARALLEL and len(core) >= 2:
+        axes = tuple(None for _ in core[:-1]) + (MODEL_AXIS,)
+    # 1-D leaves (norm scales, biases, gate biases, lam) replicate: they
+    # are tiny and feed elementwise ops on model-sharded activations.
+
+    full = tuple([None] * lead) + tuple(axes)
+    return _validated(shape, full, mesh)
+
+
+def param_pspecs(params, mesh):
+    """Tree of PartitionSpecs mirroring ``params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf, mesh), params)
+
+
+def param_shardings(params, mesh):
+    """Tree of NamedShardings mirroring ``params`` (requires a real Mesh)."""
+    from jax.sharding import NamedSharding
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(path, leaf, mesh)),
+        params)
+
+
+# ------------------------------------------------------------------- batch
+def batch_pspec(mesh, batch_size: int, ndim: int) -> P:
+    """Batch-dim data parallelism; replicate when the batch can't split
+    (e.g. the long_500k single-sequence shape)."""
+    dp = data_axis(mesh)
+    if batch_size % _axis_size(mesh, dp) != 0:
+        return P(*([None] * ndim))
+    return P(dp, *([None] * (ndim - 1)))
+
+
+# ------------------------------------------------------------------ caches
+def cache_pspec(path, leaf, mesh, batch: int) -> P:
+    """PartitionSpec for one decode-state leaf.
+
+    Decode state trees (see ``model.init_decode_state``) hold
+
+    * KV caches ``[stack, B, S, KV, hd]`` — batch shards over data, and the
+      *sequence* dim shards over ``model`` (KV heads are often < TP degree,
+      the sequence never is: this is what fits 32k/500k caches per chip);
+    * recurrent states ``[stack, B, ...]`` / tail states ``[B, ...]`` —
+      batch shards over data, the rest replicates;
+    * scalars (``pos``) — replicated.
+    """
+    shape = tuple(leaf.shape)
+    if not shape:
+        return P()
+    axes: list = [None] * len(shape)
+    dp = data_axis(mesh)
+    names = _path_names(path)
+
+    # Stacked leaves ([stack, B, ...]) carry batch at dim 1: KV/cross
+    # caches, macro-block recurrent states, and any >=4-D leaf.  Tail
+    # states and other per-batch leaves carry it at dim 0.  Checking the
+    # layout before sizes avoids misdetection when stack depth == batch.
+    stacked_key = bool(names) and (
+        names[0] in ("kv", "kv_scales", "cross")
+        or (names[0].startswith("m") and "_" in names[0]))
+    tail_key = bool(names) and names[0].startswith("tail")
+    bdim: Optional[int] = None
+    if tail_key:
+        bdim = 0 if shape[0] == batch else None
+    elif ((stacked_key or len(shape) >= 4)
+          and len(shape) >= 2 and shape[1] == batch):
+        bdim = 1
+    else:
+        for i, d in enumerate(shape):
+            if d == batch:
+                bdim = i
+                break
+    if bdim is not None and batch % _axis_size(mesh, dp) == 0:
+        axes[bdim] = dp
+
+    if len(shape) == 5 and bdim == 1:  # [stack, B, S, KV, hd] cache layout
+        if shape[2] > 1 and shape[2] % _axis_size(mesh, MODEL_AXIS) == 0:
+            axes[2] = MODEL_AXIS
+    return P(*axes)
+
+
+def cache_shardings(state, mesh, batch: int):
+    """Tree of NamedShardings for a decode-state tree."""
+    from jax.sharding import NamedSharding
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_pspec(path, leaf, mesh, batch)), state)

@@ -98,10 +98,18 @@ def main(argv=None):
         monitor.record(0, dt)
         losses.append(loss)
         print(f"step {step:5d} loss {loss:8.4f} {dt*1e3:8.1f} ms")
+        if handler.preempted:
+            # safe point: params/state are rebound, donated buffers gone
+            handler.drain()
+            saved = ("checkpoint saved" if mgr is not None
+                     else "no --ckpt-dir, nothing saved")
+            print(f"preempted at step {step}; {saved}, stopping")
+            break
         if mgr is not None and (step + 1) % args.ckpt_every == 0:
             do_ckpt()
     if mgr is not None:
-        do_ckpt()
+        if not handler.preempted:  # drain() already saved this step
+            do_ckpt()
         mgr.wait()
     handler.uninstall()
     if len(losses) >= 10:

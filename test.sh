@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# CI entrypoint: run the suite with 8 fake XLA host devices so the
+# multi-device sharding/pipeline tests exercise real shardings on
+# CPU-only runners (see README.md §Testing).
+set -euo pipefail
+cd "$(dirname "$0")"
+
+export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
+
+exec python -m pytest -x -q "$@"
