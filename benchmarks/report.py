@@ -65,6 +65,23 @@ def dist_overhead_table(path="dist_overhead.json") -> List[str]:
     ]
 
 
+def serve_table(path="BENCH_serve.json") -> List[str]:
+    r = json.load(open(path))
+
+    def ms(x):  # null when a wave completed zero requests
+        return "—" if x is None else f"{x:.1f}"
+
+    rows = ["| path | tok/s | p50 ms | p99 ms | speedup | parity |",
+            "|---|---|---|---|---|---|"]
+    for name, d in (("host-driven", r["old"]), ("device-resident", r["new"])):
+        tail = (f"{r['speedup']:.2f}× | {r['parity']}"
+                if name == "device-resident" else "1.00× | —")
+        rows.append(
+            f"| {name} | {d['tokens_per_s']:.0f} | {ms(d['p50_ms'])} "
+            f"| {ms(d['p99_ms'])} | {tail} |")
+    return rows
+
+
 def hillclimb_table(paths=("hillclimb_results.json", "hillclimb_extra.json",
                            "hillclimb_extra2.json", "hillclimb_extra3.json",
                            "hillclimb_extra4.json")) -> List[str]:
@@ -95,5 +112,10 @@ if __name__ == "__main__":
     try:
         print()
         print("\n".join(dist_overhead_table()))
+    except FileNotFoundError:
+        pass
+    try:
+        print()
+        print("\n".join(serve_table()))
     except FileNotFoundError:
         pass

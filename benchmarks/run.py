@@ -16,12 +16,13 @@ def main() -> None:
     quick = not args.full
 
     from . import (accuracy_parity, action_bits, coexist, convert_time,
-                   dist_overhead, scalability, throughput, upgrades)
+                   dist_overhead, scalability, serve_bench, throughput,
+                   upgrades)
 
     print("name,us_per_call,derived")
     failures = []
     for mod in (accuracy_parity, convert_time, action_bits, scalability,
-                upgrades, throughput, coexist, dist_overhead):
+                upgrades, throughput, coexist, serve_bench, dist_overhead):
         try:
             mod.main(quick=quick)
         except Exception as e:  # keep the suite going; report at the end

@@ -1,0 +1,146 @@
+"""Continuous-batching serve benchmark: host-driven vs device-resident.
+
+Measures the two ``repro.serve`` batchers on the same request stream —
+the seed ``ContinuousBatcher`` (one jit dispatch + one logits sync per
+token) against ``DeviceContinuousBatcher`` (slot state + queue + sampling
++ eviction fused into one jitted step, host sync every ``sync_every``
+steps) — and emits ``BENCH_serve.json`` with tokens/s and p50/p99
+per-request latency for both paths plus the exact-parity verdict.
+
+    PYTHONPATH=src:. python -m benchmarks.serve_bench            # quick
+    PYTHONPATH=src:. python -m benchmarks.serve_bench --smoke    # CI rot-check
+    PYTHONPATH=src:. python -m benchmarks.serve_bench --full
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.arch import model as M
+from repro.configs import get_smoke_config
+from repro.core import PlanterConfig, plant
+from repro.data import load_dataset
+from repro.serve.engine import (ContinuousBatcher, DeviceContinuousBatcher,
+                                ServeConfig, ServeEngine)
+
+from .common import emit
+
+SYNC_EVERY = 32
+
+
+def _bench_path(make_batcher, cfg, params, gate, ds, *, requests: int,
+                max_tokens: int, repeats: int, batch: int, cache_len: int):
+    """Run one batcher class over the request stream; best-of-``repeats``.
+
+    A warmup run with the same queue size triggers every compile up
+    front (the device batcher buckets its jit by queue size), so the
+    timed repeats measure steady-state serving only.
+    """
+    engine = ServeEngine(cfg, params, ServeConfig(max_batch=batch,
+                                                  cache_len=cache_len),
+                         gate=gate)
+    cb = make_batcher(engine)
+
+    def submit_wave(tag):
+        rids = []
+        for i in range(requests):
+            rid = (tag, i)
+            cb.submit(rid, int(i % 97 + 1), features=ds.X_test[i])
+            rids.append(rid)
+        return rids
+
+    submit_wave("warm")
+    cb.run(max_steps=100 * max_tokens)
+
+    best = None
+    for rep in range(repeats):
+        rids = submit_wave(rep)
+        t0 = time.perf_counter()
+        cb.run(max_steps=100 * max_tokens)
+        dt = time.perf_counter() - t0
+        lat = [cb.done_at[r] - t0 for r in rids if r in cb.done_at]
+        n_tok = sum(len(cb.done[r]) for r in rids if r in cb.done)
+        res = {
+            "wall_s": dt,
+            "tokens": n_tok,
+            "tokens_per_s": n_tok / dt,
+            "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat else None,
+            "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat else None,
+            "completed": sum(r in cb.done for r in rids),
+            "dropped": sum(1 for r in cb.dropped if r in set(rids)),
+        }
+        if best is None or res["tokens_per_s"] > best["tokens_per_s"]:
+            best = res
+    streams = {rid: cb.done[rid] for rid in cb.done
+               if not isinstance(rid[0], str)}
+    return best, streams
+
+
+def main(quick: bool = True, smoke: bool = False,
+         out: str = "BENCH_serve.json") -> dict:
+    requests = 16 if smoke else (48 if quick else 128)
+    max_tokens = 6 if smoke else 16
+    repeats = 2 if smoke else 4
+    batch, cache_len = 8, 64
+
+    ds = load_dataset("unsw", n=4000)
+    gate = plant(PlanterConfig(model="rf", size="S"), ds.X_train, ds.y_train,
+                 None).mapped
+    cfg = get_smoke_config("qwen2_1_5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    kw = dict(requests=requests, max_tokens=max_tokens, repeats=repeats,
+              batch=batch, cache_len=cache_len)
+
+    old, streams_old = _bench_path(
+        lambda e: ContinuousBatcher(e, eos_token=-1, max_tokens=max_tokens),
+        cfg, params, gate, ds, **kw)
+    new, streams_new = _bench_path(
+        lambda e: DeviceContinuousBatcher(e, eos_token=-1,
+                                          max_tokens=max_tokens,
+                                          sync_every=SYNC_EVERY),
+        cfg, params, gate, ds, **kw)
+
+    parity = streams_old == streams_new
+    speedup = new["tokens_per_s"] / old["tokens_per_s"]
+    result = {
+        "arch": cfg.name,
+        "requests": requests,
+        "max_tokens": max_tokens,
+        "batch": batch,
+        "sync_every": SYNC_EVERY,
+        "repeats": repeats,
+        "old": old,
+        "new": new,
+        "speedup": speedup,
+        "parity": parity,
+    }
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+
+    def ms(x):  # None when a wave completed zero requests
+        return "—" if x is None else f"{x:.1f}"
+
+    emit("serve/continuous-host", old["wall_s"] * 1e6,
+         f"tok_s={old['tokens_per_s']:.0f};p50_ms={ms(old['p50_ms'])};"
+         f"p99_ms={ms(old['p99_ms'])}")
+    emit("serve/continuous-device", new["wall_s"] * 1e6,
+         f"tok_s={new['tokens_per_s']:.0f};p50_ms={ms(new['p50_ms'])};"
+         f"p99_ms={ms(new['p99_ms'])};speedup={speedup:.2f};parity={parity}")
+    assert parity, "device-resident batcher diverged from the host batcher"
+    if not smoke:
+        assert speedup >= 2.0, f"device path only {speedup:.2f}x"
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI rot-check (no speedup assertion)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    a = ap.parse_args()
+    main(quick=not a.full, smoke=a.smoke, out=a.out)

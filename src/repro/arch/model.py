@@ -464,8 +464,16 @@ def _decode_mixer(lp, cfg: ArchConfig, kind: str, x, window, cache, pos,
 
 def decode_step(params, state, tokens, cfg: ArchConfig, *,
                 moe_impl: str = "dense", unroll: bool = False,
-                gqa_impl: str = "repeat") -> Tuple[jax.Array, Params]:
-    """One token for every sequence in the batch.  tokens [B, 1]."""
+                gqa_impl: str = "repeat",
+                sample_greedy: bool = False) -> Tuple[jax.Array, Params]:
+    """One token for every sequence in the batch.  tokens [B, 1].
+
+    ``sample_greedy=True`` returns ``(next_tokens [B] int32, state)``
+    instead of ``(logits [B, Vp], state)`` — the argmax stays on device,
+    so serving loops never sync a [B, Vp] logits plane to host just to
+    pick a token (the device-resident batcher and ``ServeEngine.generate``
+    both build on this).
+    """
     pos = state["pos"]
     x = params["embed"][tokens].astype(COMPUTE_DTYPE)
     new_state: Params = {"pos": pos + 1}
@@ -564,5 +572,7 @@ def decode_step(params, state, tokens, cfg: ArchConfig, *,
             new_state[key] = nc
             x, _ = _ffn(params["tail"][i], cfg, x, moe_impl)
 
-    logits = lm_head(params, x, cfg.norm_eps)
-    return logits[:, 0], new_state
+    logits = lm_head(params, x, cfg.norm_eps)[:, 0]
+    if sample_greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_state
+    return logits, new_state

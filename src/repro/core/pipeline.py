@@ -80,10 +80,36 @@ class MappedModel:
         return self.predict_np(np.asarray(x))
 
     def jax_predict(self, backend: str = "jnp") -> Callable:
+        if backend == "auto":
+            backend = self.select_backend()
         return self.make_jax_fn(backend)
 
     def resources(self) -> Resources:
         return self.pipeline.resources()
+
+    # ------------------------------------------------- backend selection
+    GATE_MAX_ENTRIES = 4096  # fused-kernel VMEM budget (fused_eb docstring)
+
+    def gate_sized(self) -> bool:
+        """True when every table fits one fused VMEM launch."""
+        return self.resources().entries <= self.GATE_MAX_ENTRIES
+
+    def select_backend(self, device_platform: Optional[str] = None) -> str:
+        """Pick the predictor backend for in-step (fused-with-decode) use.
+
+        EB gate-sized tables compile to the single-launch ``fused_eb``
+        Pallas kernel on TPU; everywhere else (CPU CI, large tables,
+        LB/DM strategies) the jnp oracle is both correct and faster than
+        interpret-mode Pallas.  ``ServeEngine(gate_backend='auto')`` and
+        the device-resident batcher route through here.
+        """
+        if device_platform is None:
+            import jax  # local: keep the IR module importable without jax
+            device_platform = jax.devices()[0].platform
+        if (self.strategy == "eb" and device_platform == "tpu"
+                and self.gate_sized()):
+            return "pallas_fused"
+        return "jnp"
 
 
 class _Timer:

@@ -81,15 +81,20 @@ def bnn_popcount_matmul(x_packed, w_packed, backend: str = "jnp"):
 
 def fused_eb_match(values, thresholds, rows_v, rows_m, prio_action,
                    layout, n_words: int, default_action: int,
-                   backend: str = "pallas", identity: bool = False):
-    """Single-launch EB pipeline (encode+pack+match); gate-sized tables."""
+                   backend: str = "pallas", identity: bool = False,
+                   block_b: int = 0):
+    """Single-launch EB pipeline (encode+pack+match); gate-sized tables.
+
+    ``block_b=0`` auto-tiles the batch (lane-aligned single tile for
+    gate-sized batches, 256-row tiles for throughput batches).
+    """
     if backend == "pallas":
         return fused_eb_pallas(
             jnp.asarray(values, jnp.int32), jnp.asarray(thresholds, jnp.int32),
             jnp.asarray(rows_v, jnp.uint32), jnp.asarray(rows_m, jnp.uint32),
             jnp.asarray(prio_action, jnp.int32), layout=tuple(layout),
             n_words=int(n_words), default_action=int(default_action),
-            interpret=_INTERPRET, identity=identity)
+            block_b=int(block_b), interpret=_INTERPRET, identity=identity)
     # jnp composition fallback (same semantics, two ops)
     codes = (jnp.asarray(values, jnp.int32) if identity else
              ref.bucketize_ref(jnp.asarray(values, jnp.int32),

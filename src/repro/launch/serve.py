@@ -2,6 +2,10 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
         --requests 64 --tokens 8 --gate rf
+
+    # device-resident continuous batching (the production hot path)
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+        --continuous --requests 64 --tokens 8 --gate rf --sync-every 16
 """
 from __future__ import annotations
 
@@ -15,7 +19,8 @@ from ..arch import model as M
 from ..configs import get_config, get_smoke_config
 from ..core import PlanterConfig, plant
 from ..data import load_dataset
-from ..serve.engine import ServeConfig, ServeEngine
+from ..serve.engine import (ContinuousBatcher, DeviceContinuousBatcher,
+                            ServeConfig, ServeEngine)
 
 
 def main(argv=None):
@@ -27,7 +32,18 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--gate", default="rf",
                     help="planter model for admission (or 'none')")
-    ap.add_argument("--gate-backend", default="jnp")
+    ap.add_argument("--gate-backend", default="auto",
+                    help="jnp | pallas | pallas_fused | auto "
+                         "(auto = fused EB kernel on TPU, jnp oracle else)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="slot-based continuous batching over the request "
+                         "stream instead of one fixed generate() batch")
+    ap.add_argument("--batcher", default="device",
+                    choices=["device", "host"],
+                    help="continuous-batching engine (device = fused "
+                         "jitted step; host = per-token reference)")
+    ap.add_argument("--sync-every", type=int, default=16,
+                    help="device batcher: steps per host round trip")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -42,14 +58,35 @@ def main(argv=None):
                     ds.X_train, ds.y_train, ds.X_test)
         gate = res.mapped
         print(f"gate: {args.gate} parity={res.parity:.3f} "
-              f"resources={gate.resources()}")
+              f"resources={gate.resources()} "
+              f"backend={gate.select_backend() if args.gate_backend == 'auto' else args.gate_backend}")
 
     scfg = ServeConfig(max_batch=args.batch, cache_len=64)
     engine = ServeEngine(cfg, params, scfg, gate=gate,
                          gate_backend=args.gate_backend)
 
-    # request stream: (flow features, prompt)
     feats = ds.X_test[: args.requests]
+    if args.continuous:
+        if args.batcher == "device":
+            cb = DeviceContinuousBatcher(engine, eos_token=-1,
+                                         max_tokens=args.tokens,
+                                         sync_every=args.sync_every)
+        else:
+            cb = ContinuousBatcher(engine, eos_token=-1,
+                                   max_tokens=args.tokens)
+        for rid in range(args.requests):
+            cb.submit(rid, int(rng.integers(1, cfg.vocab_size)),
+                      features=feats[rid])
+        t0 = time.perf_counter()
+        done = cb.run(max_steps=100 * args.tokens)
+        dt = time.perf_counter() - t0
+        n_tok = sum(len(v) for v in done.values())
+        print(f"[{args.batcher}] served {len(done)} requests "
+              f"(dropped {len(cb.dropped)}) — {n_tok} tokens in {dt:.2f}s "
+              f"({n_tok / dt:.1f} tok/s)")
+        return done
+
+    # request stream: (flow features, prompt) through one generate() batch
     keep = engine.admit(feats)
     print(f"admitted {keep.sum()}/{len(keep)} requests "
           f"(dropped {100 * (1 - keep.mean()):.1f}% as attack traffic)")

@@ -7,11 +7,25 @@ the request stream *inside the same jitted step* (``fused_step``), so
 admission control costs no extra dispatch and its FLOPs/bytes are visible
 in the step's cost analysis (benchmarks/coexist.py measures exactly the
 paper's relative-latency experiment).
+
+Two batchers share the scheduling semantics (ascending-slot fill, FIFO
+queue, EOS/max-token eviction):
+
+* ``ContinuousBatcher`` — the host-driven reference: one jit dispatch and
+  one logits sync per token, slot bookkeeping in Python.
+* ``DeviceContinuousBatcher`` — the hot path: all slot state lives in a
+  donated device pytree and gate-predict -> decode -> greedy sample ->
+  evict -> refill is ONE jitted step, run ``sync_every`` steps per host
+  round trip (the driver only drains finished sequences).  Admission is
+  one batched gate launch over the whole waiting queue, and the gate's
+  verdicts drive slot eviction *inside* the step.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,10 +52,15 @@ class ServeEngine:
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
+        self.gate = gate
+        # 'auto' resolves via MappedModel.select_backend (fused Pallas EB
+        # kernel on TPU for gate-sized tables, jnp oracle elsewhere)
         self.gate_fn = gate.jax_predict(gate_backend) if gate else None
         self.state = M.init_decode_state(cfg, scfg.max_batch, scfg.cache_len)
         self._step = jax.jit(
             lambda p, s, t: M.decode_step(p, s, t, cfg))
+        self._sample = jax.jit(
+            lambda p, s, t: M.decode_step(p, s, t, cfg, sample_greedy=True))
         if self.gate_fn is not None:
             gate_fn = self.gate_fn
 
@@ -50,13 +69,24 @@ class ServeEngine:
                 logits, s = M.decode_step(p, s, t, cfg)
                 return logits, s, labels
 
+            def fused_sample(p, s, t, feats):
+                labels = gate_fn(feats)
+                nxt, s = M.decode_step(p, s, t, cfg, sample_greedy=True)
+                return nxt, s, labels
+
             self._fused = jax.jit(fused)
+            self._fused_sample = jax.jit(fused_sample)
         else:
             self._fused = None
+            self._fused_sample = None
 
     # ------------------------------------------------------------ admission
     def admit(self, features: np.ndarray) -> np.ndarray:
-        """Planter gate on request features -> keep mask (True = admit)."""
+        """Planter gate on request features -> keep mask (True = admit).
+
+        One gate launch for the whole feature matrix — callers batch the
+        waiting queue rather than gating request-by-request.
+        """
         if self.gate_fn is None:
             return np.ones(len(features), bool)
         labels = np.asarray(self.gate_fn(jnp.asarray(features)))
@@ -64,34 +94,60 @@ class ServeEngine:
 
     # --------------------------------------------------------------- decode
     def step(self, tokens: np.ndarray,
-             features: Optional[np.ndarray] = None):
-        """One decode step for the whole batch; gate fused when present."""
+             features: Optional[np.ndarray] = None, block: bool = True):
+        """One decode step for the whole batch; gate fused when present.
+
+        ``block=False`` returns device arrays (no host sync) so callers
+        can keep sampling on device; the default converts to numpy for
+        backward compatibility.
+        """
         t = jnp.asarray(tokens)
         if self._fused is not None and features is not None:
             logits, self.state, labels = self._fused(
                 self.params, self.state, t, jnp.asarray(features))
+            if not block:
+                return logits, labels
             return np.asarray(logits), np.asarray(labels)
         logits, self.state = self._step(self.params, self.state, t)
+        if not block:
+            return logits, None
         return np.asarray(logits), None
 
     def generate(self, prompts: np.ndarray, n_tokens: int,
-                 features: Optional[np.ndarray] = None) -> np.ndarray:
-        """Greedy generation; prompts [B, P] seed the cache token by token."""
+                 features: Optional[np.ndarray] = None,
+                 block: bool = True) -> np.ndarray:
+        """Greedy generation; prompts [B, P] seed the cache token by token.
+
+        The argmax stays on device (``decode_step(sample_greedy=True)``)
+        and prompts are transferred once up front, so the loop issues
+        dispatches without ever syncing logits to host; the only sync is
+        the final result (skipped with ``block=False``).
+        """
         B, P = prompts.shape
         assert B == self.scfg.max_batch
+        dprompts = jnp.asarray(prompts, jnp.int32)
+        feats = (jnp.asarray(features)
+                 if (features is not None and self._fused_sample is not None)
+                 else None)
         out = []
-        tok = prompts[:, :1]
+        tok = dprompts[:, :1]
         for i in range(P + n_tokens - 1):
-            logits, _ = self.step(tok, features)
-            nxt = np.asarray(logits.argmax(axis=-1))[:, None]
-            tok = prompts[:, i + 1: i + 2] if i + 1 < P else nxt
+            if feats is not None:
+                nxt, self.state, _ = self._fused_sample(
+                    self.params, self.state, tok, feats)
+            else:
+                nxt, self.state = self._sample(self.params, self.state, tok)
+            nxt = nxt[:, None]
+            tok = dprompts[:, i + 1: i + 2] if i + 1 < P else nxt
             if i + 1 >= P:
                 out.append(nxt)
-        return np.concatenate(out, axis=1) if out else np.zeros((B, 0), int)
+        res = (jnp.concatenate(out, axis=1) if out
+               else jnp.zeros((B, 0), jnp.int32))
+        return np.asarray(res) if block else res
 
 
 class ContinuousBatcher:
-    """Slot-based continuous batching over a ServeEngine.
+    """Slot-based continuous batching over a ServeEngine (host-driven).
 
     The fleet-scale serving pattern: a fixed decode batch of ``max_batch``
     slots; finished sequences release their slot, the admission gate
@@ -100,6 +156,12 @@ class ContinuousBatcher:
     one shared cache (slot i writes its own rows; sequences are
     left-aligned since every slot starts at its admission step, which is
     sufficient for throughput accounting and tested for isolation).
+
+    Per-slot gate features are threaded through ``engine.step`` so the
+    fused gate+decode path runs in continuous mode too (the labels are
+    advisory here; ``DeviceContinuousBatcher`` wires them into eviction).
+    This class is the measured baseline for ``benchmarks/serve_bench`` —
+    it syncs logits to host every token by design.
     """
 
     def __init__(self, engine: ServeEngine, eos_token: int = 0,
@@ -111,8 +173,10 @@ class ContinuousBatcher:
         self.slot_free = np.ones(B, bool)
         self.slot_tokens: list = [[] for _ in range(B)]
         self.slot_req: list = [None] * B
-        self.queue: list = []  # (request_id, prompt_token, features)
+        self.slot_feat: Optional[np.ndarray] = None  # [B, F] once known
+        self.queue: collections.deque = collections.deque()
         self.done: dict = {}
+        self.done_at: dict = {}  # request_id -> perf_counter at completion
         self.dropped: list = []
 
     def submit(self, request_id, prompt_token: int,
@@ -122,30 +186,41 @@ class ContinuousBatcher:
             if not keep:
                 self.dropped.append(request_id)
                 return False
-        self.queue.append((request_id, prompt_token))
+        self.queue.append((request_id, prompt_token, features))
         return True
 
     def _fill_slots(self):
         for b in np.where(self.slot_free)[0]:
             if not self.queue:
                 break
-            rid, tok = self.queue.pop(0)
+            rid, tok, feat = self.queue.popleft()
             self.slot_free[b] = False
             self.slot_req[b] = rid
             self.slot_tokens[b] = [tok]
+            if feat is not None:
+                if self.slot_feat is None:
+                    self.slot_feat = np.zeros(
+                        (len(self.slot_free), len(feat)), np.int32)
+                self.slot_feat[b] = feat
 
     def run(self, max_steps: int = 1000) -> dict:
         """Decode until queue + slots drain; returns {request_id: tokens}."""
         B = self.engine.scfg.max_batch
+        use_gate = (self.engine._fused is not None
+                    and self.slot_feat is not None)
         for _ in range(max_steps):
             self._fill_slots()
             if self.slot_free.all() and not self.queue:
                 break
+            use_gate = use_gate or (self.engine._fused is not None
+                                    and self.slot_feat is not None)
             tok = np.array([
                 self.slot_tokens[b][-1] if not self.slot_free[b] else 0
                 for b in range(B)], np.int32)[:, None]
-            logits, _ = self.engine.step(tok)
+            logits, _ = self.engine.step(
+                tok, self.slot_feat if use_gate else None)
             nxt = np.asarray(logits.argmax(axis=-1))
+            now = time.perf_counter()
             for b in range(B):
                 if self.slot_free[b]:
                     continue
@@ -154,6 +229,289 @@ class ContinuousBatcher:
                 if (len(seq) - 1 >= self.max_tokens
                         or int(nxt[b]) == self.eos):
                     self.done[self.slot_req[b]] = seq[1:]
+                    self.done_at[self.slot_req[b]] = now
                     self.slot_free[b] = True
                     self.slot_req[b] = None
+        return self.done
+
+
+class DeviceContinuousBatcher:
+    """Device-resident continuous batching: one fused jitted serve step.
+
+    Reproduces ``ContinuousBatcher``'s schedule exactly — ascending-slot
+    fill from a FIFO queue, decode, greedy argmax, EOS/max-token eviction
+    — but the whole loop body is a single jitted step over a donated
+    ``ServeState`` pytree:
+
+    * slot state (free mask, per-slot generated counts, last tokens, gate
+      features) and per-request output rings live on device;
+    * the waiting queue is a device array; freed slots refill *inside*
+      the step (no host round trip between eviction and admission);
+    * the Planter gate runs fused with decode on the per-slot features
+      and its verdict is wired into eviction (slot-level admission): a
+      slot whose features classify as ``gate_action_drop`` is evicted
+      before its first token is recorded;
+    * ``sync_every`` steps run back-to-back in a ``lax.while_loop``; the
+      Python driver only reads a tiny alive flag + done mask per round
+      trip to drain finished sequences.
+
+    Admission is batched: ``run()`` makes ONE gate launch over the whole
+    waiting queue (``pregate=True``, matching the reference batcher's
+    dropped set), or defers entirely to the in-step verdict
+    (``pregate=False``), where dropped requests cost one decode step and
+    produce no tokens.
+
+    ``run(max_steps=...)`` is resumable like the host batcher: when the
+    step budget expires mid-stream, in-flight slots (including their
+    partial token rings) are carried over and un-admitted queue entries
+    are re-enqueued, so a later ``run()`` continues the exact same
+    schedule.
+    """
+
+    def __init__(self, engine: ServeEngine, eos_token: int = 0,
+                 max_tokens: int = 32, sync_every: int = 8,
+                 pregate: bool = True):
+        self.engine = engine
+        self.eos = int(eos_token)
+        self.max_tokens = int(max_tokens)
+        self.sync_every = max(1, int(sync_every))
+        self.pregate = pregate
+        scfg = engine.scfg
+        self._B = scfg.max_batch
+        self._decode = M.init_decode_state(engine.cfg, scfg.max_batch,
+                                           scfg.cache_len)
+        self.queue: collections.deque = collections.deque()
+        self.done: dict = {}
+        self.done_at: dict = {}
+        self.dropped: list = []
+        # per-slot carryover from a max_steps-bounded run: rid, gen, last
+        # token, gate features, partial token ring
+        self._carry: List[Optional[dict]] = [None] * self._B
+        self._run_k: Dict[Tuple[int, int, int], Callable] = {}
+
+    def submit(self, request_id, prompt_token: int,
+               features: Optional[np.ndarray] = None):
+        """Enqueue; admission happens batched in ``run()``."""
+        self.queue.append((
+            request_id, int(prompt_token),
+            None if features is None else np.asarray(features)))
+        return True
+
+    # ------------------------------------------------------------- step fn
+    def _make_run_k(self, n_queue: int, n_out: int, n_feat: int) -> Callable:
+        cfg = self.engine.cfg
+        gate_fn = self.engine.gate_fn
+        drop = self.engine.scfg.gate_action_drop
+        eos, max_tokens, Nq, R = self.eos, self.max_tokens, n_queue, n_out
+
+        def one_step(params, qtok, qreq, qfeat, qhasf, nq, st):
+            # --- fill freed slots from the device queue (FIFO, ascending
+            # slot index — the reference batcher's order); qreq maps a
+            # queue entry to its output row (carryover rows come first)
+            free = st["free"]
+            rank = jnp.cumsum(free.astype(jnp.int32)) - 1
+            cand = st["head"] + rank
+            take = free & (cand < nq)
+            idx = jnp.clip(cand, 0, Nq - 1)
+            st = dict(
+                st,
+                req=jnp.where(take, qreq[idx], st["req"]),
+                last=jnp.where(take, qtok[idx], st["last"]),
+                feat=jnp.where(take[:, None], qfeat[idx], st["feat"]),
+                hasf=jnp.where(take, qhasf[idx], st["hasf"]),
+                gen=jnp.where(take, 0, st["gen"]),
+                free=free & ~take,
+                head=st["head"] + take.sum(),
+            )
+            work = (~st["free"]).any()
+
+            def decode_and_evict(st):
+                free, req, gen = st["free"], st["req"], st["gen"]
+                active = ~free
+                tok = jnp.where(free, 0, st["last"])[:, None]
+                nxt, dec = M.decode_step(params, st["decode"], tok, cfg,
+                                         sample_greedy=True)
+                # slot-level admission: the fused gate's verdict evicts a
+                # just-filled slot before its first token is recorded
+                if gate_fn is not None:
+                    labels = gate_fn(st["feat"])
+                    gdrop = active & st["hasf"] & (labels == drop)
+                else:
+                    gdrop = jnp.zeros_like(free)
+                out_drop = st["out_drop"].at[
+                    jnp.where(gdrop, req, R)].set(True, mode="drop")
+                live = active & ~gdrop
+                widx = jnp.where(live, req, R)
+                out_tok = st["out_tok"].at[
+                    widx, jnp.minimum(gen, max_tokens - 1)].set(
+                        nxt, mode="drop")
+                gen = gen + live.astype(jnp.int32)
+                fin = live & ((gen >= max_tokens) | (nxt == eos))
+                fidx = jnp.where(fin, req, R)
+                return dict(
+                    st,
+                    decode=dec,
+                    free=free | gdrop | fin,
+                    gen=gen,
+                    last=jnp.where(live, nxt, st["last"]),
+                    out_tok=out_tok,
+                    out_len=st["out_len"].at[fidx].set(gen, mode="drop"),
+                    out_done=st["out_done"].at[fidx].set(True, mode="drop"),
+                    out_drop=out_drop,
+                )
+
+            # no active slots after fill => queue drained too; skip the
+            # decode so `pos` matches the reference batcher's early break
+            st = jax.lax.cond(work, decode_and_evict, lambda s: s, st)
+            return st, work
+
+        def run_k(params, st, qtok, qreq, qfeat, qhasf, nq, k):
+            # k is traced: the host passes min(sync_every, steps left) so
+            # max_steps is honoured exactly (no chunk overshoot)
+            def cond(c):
+                i, _, alive = c
+                return (i < k) & alive
+
+            def body(c):
+                i, st, _ = c
+                st, alive = one_step(params, qtok, qreq, qfeat, qhasf, nq,
+                                     st)
+                return i + 1, st, alive
+
+            _, st, alive = jax.lax.while_loop(
+                cond, body, (jnp.int32(0), st, jnp.bool_(True)))
+            return st, alive
+
+        return jax.jit(run_k, donate_argnums=(1,))
+
+    # ----------------------------------------------------------------- run
+    def run(self, max_steps: int = 1000) -> dict:
+        """Decode until queue + slots drain (or ``max_steps``); returns
+        {request_id: tokens}.  Unfinished work survives: in-flight slots
+        and un-admitted queue entries resume on the next ``run()``."""
+        pending = list(self.queue)
+        self.queue.clear()
+        carry = [(b, c) for b, c in enumerate(self._carry) if c is not None]
+        if not pending and not carry:
+            return self.done
+        eng = self.engine
+        # batched admission: ONE gate launch over the whole waiting queue
+        keep = np.ones(len(pending), bool)
+        gated = [i for i, (_, _, f) in enumerate(pending) if f is not None]
+        if gated and eng.gate_fn is not None and self.pregate:
+            keep[gated] = eng.admit(
+                np.stack([pending[i][2] for i in gated]))
+        req_ids: List[Any] = [c["rid"] for _, c in carry]
+        kept: List[Tuple[Any, int, Optional[np.ndarray]]] = []
+        for k, (rid, tok, feat) in enumerate(pending):
+            if not keep[k]:
+                self.dropped.append(rid)
+                continue
+            req_ids.append(rid)
+            kept.append((rid, tok, feat))
+        if not req_ids:
+            return self.done
+        C, n = len(carry), len(kept)
+        n_feat = max(
+            [len(f) for _, _, f in kept if f is not None]
+            + [len(c["feat"]) for _, c in carry if c["feat"] is not None],
+            default=1)
+        # pow2 buckets bound jit retraces across queue sizes
+        Nq = max(8, 1 << (max(1, n) - 1).bit_length())
+        R = max(8, 1 << (C + n - 1).bit_length())
+        qtok = np.zeros(Nq, np.int32)
+        qreq = np.zeros(Nq, np.int32)
+        qfeat = np.zeros((Nq, n_feat), np.int32)
+        qhasf = np.zeros(Nq, bool)
+        for k, (_, tok, f) in enumerate(kept):
+            qtok[k] = tok
+            qreq[k] = C + k  # output row: carryover rows come first
+            if f is not None:
+                qfeat[k, : len(f)] = f[:n_feat]
+                qhasf[k] = True
+
+        B = self._B
+        free = np.ones(B, bool)
+        req = np.full(B, R, np.int32)
+        gen = np.zeros(B, np.int32)
+        last = np.zeros(B, np.int32)
+        feat = np.zeros((B, n_feat), np.int32)
+        hasf = np.zeros(B, bool)
+        out_tok = np.zeros((R, self.max_tokens), np.int32)
+        for row, (b, c) in enumerate(carry):  # resume in-flight slots
+            free[b] = False
+            req[b] = row
+            gen[b] = c["gen"]
+            last[b] = c["last"]
+            hasf[b] = c["hasf"]
+            if c["feat"] is not None:
+                feat[b, : len(c["feat"])] = c["feat"][:n_feat]
+            out_tok[row, : c["gen"]] = c["toks"]
+        st = {
+            "decode": self._decode,
+            "free": jnp.asarray(free),
+            "req": jnp.asarray(req),
+            "gen": jnp.asarray(gen),
+            "last": jnp.asarray(last),
+            "feat": jnp.asarray(feat),
+            "hasf": jnp.asarray(hasf),
+            "head": jnp.int32(0),
+            "out_tok": jnp.asarray(out_tok),
+            "out_len": jnp.zeros(R, jnp.int32),
+            "out_done": jnp.zeros(R, bool),
+            "out_drop": jnp.zeros(R, bool),
+        }
+        key = (Nq, R, n_feat)
+        if key not in self._run_k:
+            self._run_k[key] = self._make_run_k(Nq, R, n_feat)
+        run_k = self._run_k[key]
+        args = (jnp.asarray(qtok), jnp.asarray(qreq), jnp.asarray(qfeat),
+                jnp.asarray(qhasf), jnp.int32(n))
+
+        seen = np.zeros(R, bool)
+        remaining = max_steps
+        alive = True
+        while remaining > 0:
+            k = min(self.sync_every, remaining)
+            st, alive = run_k(eng.params, st, *args, jnp.int32(k))
+            remaining -= k
+            done_mask = np.asarray(st["out_done"])  # drain every K steps
+            now = time.perf_counter()
+            for qi in np.where(done_mask & ~seen)[0]:
+                self.done_at[req_ids[qi]] = now
+            seen = done_mask
+            if not bool(alive):
+                break
+        self._decode = st["decode"]
+        out_tok = np.asarray(st["out_tok"])
+        out_len = np.asarray(st["out_len"])
+        out_drop = np.asarray(st["out_drop"])
+        for qi in range(C + n):
+            if seen[qi]:
+                self.done[req_ids[qi]] = [
+                    int(t) for t in out_tok[qi, : out_len[qi]]]
+            elif out_drop[qi]:
+                self.dropped.append(req_ids[qi])
+        # carry in-flight slots + re-enqueue un-admitted entries so a
+        # later run() resumes the exact schedule (host-batcher semantics)
+        self._carry = [None] * B
+        if alive:
+            s_free = np.asarray(st["free"])
+            s_req = np.asarray(st["req"])
+            s_gen = np.asarray(st["gen"])
+            s_last = np.asarray(st["last"])
+            s_feat = np.asarray(st["feat"])
+            s_hasf = np.asarray(st["hasf"])
+            for b in range(B):
+                if s_free[b]:
+                    continue
+                qi = int(s_req[b])
+                self._carry[b] = dict(
+                    rid=req_ids[qi], gen=int(s_gen[b]), last=int(s_last[b]),
+                    hasf=bool(s_hasf[b]),
+                    feat=s_feat[b].copy() if s_hasf[b] else None,
+                    toks=out_tok[qi, : s_gen[b]].copy())
+            head = int(np.asarray(st["head"]))
+            for rid, tok, f in reversed(kept[head:]):
+                self.queue.appendleft((rid, tok, f))
         return self.done

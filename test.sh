@@ -7,4 +7,9 @@ cd "$(dirname "$0")"
 
 export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
 
+# serve-benchmark rot-check: tiny CPU run of both batcher paths
+# (parity asserted, no timing thresholds)
+PYTHONPATH=src:. python -m benchmarks.serve_bench --smoke \
+    --out /tmp/BENCH_serve_smoke.json
+
 exec python -m pytest -x -q "$@"

@@ -113,3 +113,39 @@ def test_fused_eb_kernel_matches_staged():
         staged = np.asarray(r.mapped.jax_predict("pallas")(xs))
         fused = np.asarray(r.mapped.jax_predict("pallas_fused")(xs))
         np.testing.assert_array_equal(staged, fused)
+
+
+def test_fused_eb_gate_tile_matches_throughput_tile():
+    """Auto batch tiling (gate-sized launches) == 256-row tile == oracle."""
+    from repro.core import PlanterConfig, plant
+    from repro.data import load_dataset
+    from repro.kernels.fused_eb import DEFAULT_BLOCK_B, gate_block_b
+    import jax.numpy as jnp
+    assert gate_block_b(4) == 128 and gate_block_b(130) == 256
+    assert gate_block_b(1000) == DEFAULT_BLOCK_B
+    ds = load_dataset("unsw", n=1500)
+    r = plant(PlanterConfig(model="rf", strategy="eb", size="S"),
+              ds.X_train, ds.y_train, None)
+    xs = jnp.asarray(ds.X_test[:8])  # decode-batch-sized gate launch
+    auto = np.asarray(r.mapped.jax_predict("pallas_fused")(xs))
+    np.testing.assert_array_equal(auto, r.mapped.predict(ds.X_test[:8]))
+
+
+def test_mapped_model_backend_selection():
+    """In-step backend: fused EB kernel on TPU for gate-sized tables,
+    jnp oracle everywhere else (CPU CI, large tables)."""
+    from repro.core import PlanterConfig, plant
+    from repro.data import load_dataset
+    ds = load_dataset("unsw", n=1500)
+    r = plant(PlanterConfig(model="rf", strategy="eb", size="S"),
+              ds.X_train, ds.y_train, None)
+    assert r.mapped.gate_sized()
+    assert r.mapped.select_backend("tpu") == "pallas_fused"
+    assert r.mapped.select_backend("cpu") == "jnp"
+    lb = plant(PlanterConfig(model="svm", size="S"),  # lookup-based
+               ds.X_train, ds.y_train, None)
+    assert lb.mapped.select_backend("tpu") == "jnp"
+    # 'auto' resolves against the actual local platform without error
+    fn = r.mapped.jax_predict("auto")
+    np.testing.assert_array_equal(
+        np.asarray(fn(ds.X_test[:16])), r.mapped.predict(ds.X_test[:16]))

@@ -60,6 +60,22 @@ def test_greedy_determinism(engine):
     np.testing.assert_array_equal(a, b)
 
 
+def test_step_and_generate_nonblocking(engine):
+    """block=False keeps logits/tokens as device arrays (no host sync)."""
+    eng, _ = engine
+    eng.state = M.init_decode_state(eng.cfg, 4, 32)
+    logits, labels = eng.step(np.ones((4, 1), np.int32), DS.X_test[:4],
+                              block=False)
+    assert isinstance(logits, jax.Array) and isinstance(labels, jax.Array)
+    eng.state = M.init_decode_state(eng.cfg, 4, 32)
+    prompts = np.ones((4, 3), np.int64)
+    dev = eng.generate(prompts, 4, features=DS.X_test[:4], block=False)
+    assert isinstance(dev, jax.Array)
+    eng.state = M.init_decode_state(eng.cfg, 4, 32)
+    host = eng.generate(prompts, 4, features=DS.X_test[:4])
+    np.testing.assert_array_equal(np.asarray(dev), host)
+
+
 def test_continuous_batching_drains_queue(engine):
     from repro.serve.engine import ContinuousBatcher
     eng, _ = engine
@@ -76,3 +92,114 @@ def test_continuous_batching_drains_queue(engine):
     assert len(cb.dropped) == 10 - n_submitted
     for rid, toks in done.items():
         assert 1 <= len(toks) <= 5
+
+
+# ---------------------------------------------------------------------------
+# Device-resident continuous batching (DeviceContinuousBatcher)
+# ---------------------------------------------------------------------------
+from repro.serve.engine import ContinuousBatcher, DeviceContinuousBatcher
+
+
+def _fresh_engine(engine, batch=4, cache_len=32):
+    eng, res = engine
+    return ServeEngine(eng.cfg, eng.params,
+                       ServeConfig(max_batch=batch, cache_len=cache_len),
+                       gate=res.mapped)
+
+
+def _run_workload(cb, n_req=10, max_steps=300, seed=0):
+    rng = np.random.default_rng(seed)
+    for rid in range(n_req):
+        cb.submit(rid, int(rng.integers(1, 100)), features=DS.X_test[rid])
+    return cb.run(max_steps=max_steps)
+
+
+def test_device_batcher_parity_max_token_eviction(engine):
+    """Token streams + done/dropped sets match the host batcher exactly
+    when every sequence runs to the max-token limit (eos disabled)."""
+    host = ContinuousBatcher(_fresh_engine(engine), eos_token=-1,
+                             max_tokens=4)
+    dev = DeviceContinuousBatcher(_fresh_engine(engine), eos_token=-1,
+                                  max_tokens=4, sync_every=3)
+    done_h = _run_workload(host)
+    done_d = _run_workload(dev)
+    assert done_h == done_d
+    assert host.dropped == dev.dropped
+    assert all(len(v) == 4 for v in done_d.values())
+
+
+def test_device_batcher_parity_eos_eviction(engine):
+    """Same, with an eos token that actually fires mid-stream."""
+    probe = ContinuousBatcher(_fresh_engine(engine), eos_token=-1,
+                              max_tokens=6)
+    done_p = _run_workload(probe)
+    # pick a token generated mid-stream so eos eviction really triggers
+    eos = next(int(v[1]) for v in done_p.values() if len(v) > 1)
+    host = ContinuousBatcher(_fresh_engine(engine), eos_token=eos,
+                             max_tokens=6)
+    dev = DeviceContinuousBatcher(_fresh_engine(engine), eos_token=eos,
+                                  max_tokens=6, sync_every=4)
+    done_h = _run_workload(host)
+    done_d = _run_workload(dev)
+    assert done_h == done_d
+    assert any(len(v) < 6 for v in done_d.values())  # eos actually evicted
+
+
+def test_device_batcher_sync_every_invariant(engine):
+    """The drain interval is a perf knob only — outputs are identical."""
+    a = DeviceContinuousBatcher(_fresh_engine(engine), eos_token=-1,
+                                max_tokens=4, sync_every=1)
+    b = DeviceContinuousBatcher(_fresh_engine(engine), eos_token=-1,
+                                max_tokens=4, sync_every=7)
+    assert _run_workload(a) == _run_workload(b)
+
+
+def test_device_batcher_in_step_gate_eviction(engine):
+    """pregate=False: the fused gate's in-step verdict evicts dropped
+    requests at their first step, before any token is recorded."""
+    eng = _fresh_engine(engine)
+    dev = DeviceContinuousBatcher(eng, eos_token=-1, max_tokens=4,
+                                  pregate=False, sync_every=4)
+    _run_workload(dev, n_req=10)
+    keep = eng.admit(DS.X_test[:10])
+    assert sorted(dev.dropped) == sorted(np.where(~keep)[0])
+    assert not any(rid in dev.done for rid in dev.dropped)
+    assert sorted(dev.done) == sorted(np.where(keep)[0])
+
+
+def test_device_batcher_max_steps_resumes(engine):
+    """A max_steps-bounded run keeps in-flight slots + un-admitted queue
+    entries; repeated small runs reproduce the host batcher's single run
+    exactly (same token streams, nothing lost)."""
+    host = ContinuousBatcher(_fresh_engine(engine), eos_token=-1,
+                             max_tokens=4)
+    done_h = _run_workload(host)
+    dev = DeviceContinuousBatcher(_fresh_engine(engine), eos_token=-1,
+                                  max_tokens=4, sync_every=2)
+    rng = np.random.default_rng(0)
+    for rid in range(10):
+        dev.submit(rid, int(rng.integers(1, 100)), features=DS.X_test[rid])
+    for _ in range(100):  # 3 steps per run: expires mid-stream repeatedly
+        before = len(dev.done)
+        dev.run(max_steps=3)
+        if len(dev.done) == before and not dev.queue \
+                and all(c is None for c in dev._carry):
+            break
+    assert dev.done == done_h
+    assert dev.dropped == host.dropped
+
+
+def test_device_batcher_multi_wave_reuses_cache(engine):
+    """Back-to-back run() calls share the decode cache (pos carries over)
+    and accumulate done/dropped bookkeeping without collisions."""
+    dev = DeviceContinuousBatcher(_fresh_engine(engine), eos_token=-1,
+                                  max_tokens=3, sync_every=2)
+    for rid in range(5):
+        dev.submit(("a", rid), rid + 1, features=DS.X_test[rid])
+    first = dict(dev.run(max_steps=100))
+    for rid in range(5):
+        dev.submit(("b", rid), rid + 1, features=DS.X_test[rid])
+    both = dev.run(max_steps=100)
+    assert set(first).issubset(both)
+    n_admitted = sum(1 for k in both) + len(dev.dropped)
+    assert n_admitted == 10
