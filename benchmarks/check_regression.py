@@ -1,0 +1,92 @@
+"""Bench regression gate: compare a fresh serve-bench run to the
+checked-in baseline.
+
+Parity is a *hard* gate — a sharded or device-resident batcher whose
+token streams diverge from the host reference fails CI.  Timing is
+warn-only: CI runners are noisy, so a tokens/s drop prints a ``::warning``
+annotation (visible in the GitHub checks UI) without failing the job.
+
+    python -m benchmarks.check_regression NEW.json BENCH_serve.json
+    python -m benchmarks.check_regression NEW.json BASE.json --timing-tol 0.5
+
+Exit codes: 0 = ok (possibly with timing warnings), 1 = correctness
+regression (parity break, zero completions, or malformed input).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(new: dict, base: dict, timing_tol: float = 0.5) -> int:
+    failures = []
+    warnings = []
+
+    if not new.get("parity"):
+        failures.append("device-resident batcher lost exact parity with "
+                        "the host batcher")
+    sharded = new.get("sharded")
+    if sharded is not None and not sharded.get("parity"):
+        failures.append(
+            f"sharded serve (mesh {sharded.get('mesh')}) lost "
+            f"{sharded.get('parity_mode')} parity")
+    for path_name in ("old", "new"):
+        if new.get(path_name, {}).get("completed", 0) <= 0:
+            failures.append(f"{path_name} path completed zero requests")
+
+    base_tps = base.get("new", {}).get("tokens_per_s")
+    new_tps = new.get("new", {}).get("tokens_per_s")
+    same_scale = new.get("requests") == base.get("requests")
+    if base_tps and new_tps and not same_scale:
+        # smoke runs are smaller than the checked-in quick baseline;
+        # a threshold comparison across scales would warn permanently
+        print(f"bench scales differ (requests {new.get('requests')} vs "
+              f"baseline {base.get('requests')}): tokens/s "
+              f"{new_tps:.0f} vs {base_tps:.0f}, threshold not applied")
+    elif base_tps and new_tps and new_tps < (1.0 - timing_tol) * base_tps:
+        warnings.append(
+            f"device-path throughput {new_tps:.0f} tok/s is "
+            f"{100 * (1 - new_tps / base_tps):.0f}% below the baseline "
+            f"{base_tps:.0f} tok/s (warn-only: CI timing is noisy)")
+    base_speedup = base.get("speedup")
+    new_speedup = new.get("speedup")
+    if base_speedup and new_speedup and new_speedup < 1.0:
+        warnings.append(
+            f"device path slower than host path ({new_speedup:.2f}x, "
+            f"baseline {base_speedup:.2f}x)")
+
+    for w in warnings:
+        print(f"::warning title=serve-bench timing::{w}")
+    for f in failures:
+        print(f"::error title=serve-bench regression::{f}")
+    if failures:
+        return 1
+    print(f"bench gate ok: parity={new.get('parity')}"
+          + (f", sharded={sharded.get('parity')}" if sharded else "")
+          + f", {len(warnings)} timing warning(s)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new", help="fresh serve-bench output json")
+    ap.add_argument("baseline", help="checked-in BENCH_serve.json")
+    ap.add_argument("--timing-tol", type=float, default=0.5,
+                    help="warn when tokens/s drops more than this "
+                         "fraction below baseline (default 0.5)")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.new) as f:
+            new = json.load(f)
+        with open(args.baseline) as f:
+            base = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"::error title=serve-bench regression::cannot read bench "
+              f"json: {e}")
+        return 1
+    return check(new, base, timing_tol=args.timing_tol)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

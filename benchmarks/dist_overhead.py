@@ -19,10 +19,10 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 
+from repro.arch import model as M
 from repro.configs import get_smoke_config
 from repro.data.tokens import TokenPipeline, TokenPipelineConfig
 from repro.dist import compress as C
-from repro.arch import model as M
 from repro.train import optimizer as OPT
 from repro.train.step import TrainConfig, make_train_step
 

@@ -15,7 +15,8 @@ def fmt_bytes(x) -> str:
 
 def dryrun_table(path="dryrun_results.json") -> List[str]:
     rows = json.load(open(path))
-    out = ["| arch | shape | mesh | kind | HLO GFLOPs* | bytes* | coll bytes* | peak mem/dev | compile s |",
+    out = ["| arch | shape | mesh | kind | HLO GFLOPs* | bytes* "
+           "| coll bytes* | peak mem/dev | compile s |",
            "|---|---|---|---|---|---|---|---|---|"]
     for r in rows:
         if "skipped" in r:
@@ -43,7 +44,8 @@ def roofline_table(path="roofline_baseline.json") -> List[str]:
            "|---|---|---|---|---|---|---|---|"]
     for r in rows:
         if "error" in r:
-            out.append(f"| {r['arch']} | {r['shape']} | ERROR {r['error'][:60]} | | | | | |")
+            out.append(f"| {r['arch']} | {r['shape']} "
+                       f"| ERROR {r['error'][:60]} | | | | | |")
             continue
         out.append(
             f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} "

@@ -1,14 +1,22 @@
 """Continuous-batching serve benchmark: host-driven vs device-resident.
 
-Measures the two ``repro.serve`` batchers on the same request stream —
-the seed ``ContinuousBatcher`` (one jit dispatch + one logits sync per
+Measures the ``repro.serve`` batchers on the same request stream — the
+seed ``ContinuousBatcher`` (one jit dispatch + one logits sync per
 token) against ``DeviceContinuousBatcher`` (slot state + queue + sampling
 + eviction fused into one jitted step, host sync every ``sync_every``
 steps) — and emits ``BENCH_serve.json`` with tokens/s and p50/p99
 per-request latency for both paths plus the exact-parity verdict.
 
+``--mesh DATAxMODEL`` additionally runs the sharded serve path
+(``ShardedServe`` router over per-host placed engines) and asserts
+parity: on a single data shard (``1x8``) the full multi-wave token
+stream must be bit-identical to the single-host batcher; on multi-shard
+meshes each shard's streams must match a single-host batcher fed the
+same requests in the same order (FIFO hand-off preserved).
+
     PYTHONPATH=src:. python -m benchmarks.serve_bench            # quick
     PYTHONPATH=src:. python -m benchmarks.serve_bench --smoke    # CI rot-check
+    PYTHONPATH=src:. python -m benchmarks.serve_bench --smoke --mesh 1x8
     PYTHONPATH=src:. python -m benchmarks.serve_bench --full
 """
 from __future__ import annotations
@@ -34,16 +42,17 @@ SYNC_EVERY = 32
 
 def _bench_path(make_batcher, cfg, params, gate, ds, *, requests: int,
                 max_tokens: int, repeats: int, batch: int, cache_len: int):
-    """Run one batcher class over the request stream; best-of-``repeats``.
+    """Run one batcher over the request stream; best-of-``repeats``.
 
-    A warmup run with the same queue size triggers every compile up
-    front (the device batcher buckets its jit by queue size), so the
-    timed repeats measure steady-state serving only.
+    ``make_batcher(cfg, params, scfg, gate)`` builds the path under test
+    (host batcher, device batcher, or the sharded router — they share
+    the submit/run/done interface).  A warmup run with the same queue
+    size triggers every compile up front (the device batcher buckets its
+    jit by queue size), so the timed repeats measure steady-state
+    serving only.
     """
-    engine = ServeEngine(cfg, params, ServeConfig(max_batch=batch,
-                                                  cache_len=cache_len),
-                         gate=gate)
-    cb = make_batcher(engine)
+    scfg = ServeConfig(max_batch=batch, cache_len=cache_len)
+    cb = make_batcher(cfg, params, scfg, gate)
 
     def submit_wave(tag):
         rids = []
@@ -80,7 +89,33 @@ def _bench_path(make_batcher, cfg, params, gate, ds, *, requests: int,
     return best, streams
 
 
-def main(quick: bool = True, smoke: bool = False,
+def _per_shard_parity(mesh, cfg, params, gate, ds, *, requests: int,
+                      max_tokens: int, batch: int, cache_len: int) -> bool:
+    """Multi-shard hand-off check: one request wave through the router,
+    then each shard's streams replayed through a fresh single-host
+    device batcher fed the same requests in the same (FIFO) order."""
+    from repro.serve.router import ShardedServe
+
+    scfg = ServeConfig(max_batch=batch, cache_len=cache_len)
+    router = ShardedServe(cfg, params, scfg, mesh, gate=gate, eos_token=-1,
+                          max_tokens=max_tokens, sync_every=SYNC_EVERY)
+    toks = {rid: rid % 97 + 1 for rid in range(requests)}
+    for rid in range(requests):
+        router.submit(rid, toks[rid], features=ds.X_test[rid])
+    done = router.run(max_steps=100 * max_tokens)
+    ok = len(done) + len(router.dropped) == requests
+    for rids in router.assigned:
+        ref = DeviceContinuousBatcher(
+            ServeEngine(cfg, params, scfg, gate=gate), eos_token=-1,
+            max_tokens=max_tokens, sync_every=SYNC_EVERY)
+        for rid in rids:
+            ref.submit(rid, toks[rid], features=ds.X_test[rid])
+        ref_done = ref.run(max_steps=100 * max_tokens)
+        ok = ok and all(done.get(r) == ref_done.get(r) for r in rids)
+    return ok
+
+
+def main(quick: bool = True, smoke: bool = False, mesh_spec: str = None,
          out: str = "BENCH_serve.json") -> dict:
     requests = 16 if smoke else (48 if quick else 128)
     max_tokens = 6 if smoke else 16
@@ -96,12 +131,14 @@ def main(quick: bool = True, smoke: bool = False,
               batch=batch, cache_len=cache_len)
 
     old, streams_old = _bench_path(
-        lambda e: ContinuousBatcher(e, eos_token=-1, max_tokens=max_tokens),
+        lambda c, p, s, g: ContinuousBatcher(
+            ServeEngine(c, p, s, gate=g), eos_token=-1,
+            max_tokens=max_tokens),
         cfg, params, gate, ds, **kw)
     new, streams_new = _bench_path(
-        lambda e: DeviceContinuousBatcher(e, eos_token=-1,
-                                          max_tokens=max_tokens,
-                                          sync_every=SYNC_EVERY),
+        lambda c, p, s, g: DeviceContinuousBatcher(
+            ServeEngine(c, p, s, gate=g), eos_token=-1,
+            max_tokens=max_tokens, sync_every=SYNC_EVERY),
         cfg, params, gate, ds, **kw)
 
     parity = streams_old == streams_new
@@ -118,6 +155,38 @@ def main(quick: bool = True, smoke: bool = False,
         "speedup": speedup,
         "parity": parity,
     }
+
+    if mesh_spec:
+        from repro.launch.mesh import make_serve_mesh
+        from repro.serve.router import ShardedServe
+
+        mesh = make_serve_mesh(mesh_spec)
+        ndata = int(mesh.shape["data"])
+        shd, streams_shd = _bench_path(
+            lambda c, p, s, g: ShardedServe(
+                c, p, s, mesh, gate=g, eos_token=-1,
+                max_tokens=max_tokens, sync_every=SYNC_EVERY),
+            cfg, params, gate, ds, **kw)
+        if ndata == 1:
+            # one shard = one schedule: the whole multi-wave stream must
+            # be bit-identical to the single-host batcher
+            shd_parity = streams_shd == streams_old
+            parity_mode = "global"
+        else:
+            shd_parity = _per_shard_parity(mesh, cfg, params, gate, ds,
+                                           requests=requests,
+                                           max_tokens=max_tokens,
+                                           batch=batch, cache_len=cache_len)
+            parity_mode = "per-shard"
+        result["sharded"] = {
+            "mesh": mesh_spec,
+            "data": ndata,
+            "model": int(mesh.shape["model"]),
+            "parity": shd_parity,
+            "parity_mode": parity_mode,
+            **shd,
+        }
+
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
 
@@ -130,9 +199,25 @@ def main(quick: bool = True, smoke: bool = False,
     emit("serve/continuous-device", new["wall_s"] * 1e6,
          f"tok_s={new['tokens_per_s']:.0f};p50_ms={ms(new['p50_ms'])};"
          f"p99_ms={ms(new['p99_ms'])};speedup={speedup:.2f};parity={parity}")
+    if mesh_spec:
+        s = result["sharded"]
+        emit("serve/continuous-sharded", s["wall_s"] * 1e6,
+             f"mesh={mesh_spec};tok_s={s['tokens_per_s']:.0f};"
+             f"p50_ms={ms(s['p50_ms'])};p99_ms={ms(s['p99_ms'])};"
+             f"parity={s['parity']}({s['parity_mode']})")
     assert parity, "device-resident batcher diverged from the host batcher"
-    if not smoke:
+    if mesh_spec:
+        assert result["sharded"]["parity"], (
+            f"sharded serve ({mesh_spec}) diverged from the single-host "
+            f"batcher [{result['sharded']['parity_mode']} parity]")
+    if not smoke and not quick:
+        # timing threshold enforced only in --full runs; quick-mode
+        # results warn instead (same policy as check_regression: timing
+        # is noisy on shared runners, parity is the hard gate)
         assert speedup >= 2.0, f"device path only {speedup:.2f}x"
+    elif speedup < 2.0:
+        print(f"::warning title=serve-bench timing::device path only "
+              f"{speedup:.2f}x (threshold enforced in --full runs only)")
     return result
 
 
@@ -141,6 +226,9 @@ if __name__ == "__main__":
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI rot-check (no speedup assertion)")
+    ap.add_argument("--mesh", default=None,
+                    help="also run the sharded serve path on this "
+                         "DATAxMODEL mesh (e.g. 1x8) or 'auto'")
     ap.add_argument("--out", default="BENCH_serve.json")
     a = ap.parse_args()
-    main(quick=not a.full, smoke=a.smoke, out=a.out)
+    main(quick=not a.full, smoke=a.smoke, mesh_spec=a.mesh, out=a.out)

@@ -49,7 +49,8 @@ def _walk_jnp(nt: NodeTable):
         def body(node, _):
             is_leaf = leaf[node] >= 0
             f = jnp.maximum(feature[node], 0)
-            go_left = jnp.take_along_axis(x, f[:, None], axis=1)[:, 0] <= threshold[node]
+            xv = jnp.take_along_axis(x, f[:, None], axis=1)[:, 0]
+            go_left = xv <= threshold[node]
             nxt = jnp.where(go_left, left[node], right[node])
             return jnp.where(is_leaf, node, nxt), None
 

@@ -88,7 +88,8 @@ class FeatureTable:
         for lo, hi in zip(bounds[:-1], bounds[1:]):
             entries += len(range_to_ternary(int(lo), int(hi) - 1, self.in_bits))
         code_bits = max(1, int(np.ceil(np.log2(max(2, self.n_codes)))))
-        return Resources(stages=1, entries=entries, entry_bits=2 * self.in_bits + code_bits)
+        return Resources(stages=1, entries=entries,
+                         entry_bits=2 * self.in_bits + code_bits)
 
 
 @dataclasses.dataclass
@@ -108,7 +109,8 @@ class LookupTable:
 
     def resources(self) -> Resources:
         v, k = self.table.shape
-        return Resources(stages=1, entries=v, entry_bits=self.in_bits + k * self.action_bits)
+        return Resources(stages=1, entries=v,
+                         entry_bits=self.in_bits + k * self.action_bits)
 
 
 @dataclasses.dataclass
@@ -148,7 +150,8 @@ class TernaryTable:
         return out.astype(np.int32)
 
     def resources(self) -> Resources:
-        action_bits = max(1, int(np.ceil(np.log2(max(2, self.actions.max(initial=0) + 2)))))
+        action_bits = max(1, int(np.ceil(
+            np.log2(max(2, self.actions.max(initial=0) + 2)))))
         return Resources(
             stages=1,
             entries=len(self.values),

@@ -69,6 +69,29 @@ def _axis_size(mesh, axis) -> int:
     return int(mesh.shape[axis])
 
 
+def _present(mesh, axis):
+    """Restrict a proposed axis to the names the mesh actually has.
+
+    Serve submeshes are narrower than the training pod (a per-host slice
+    may carry only ``model``, a CPU smoke mesh only ``data``); a proposal
+    naming an absent axis must degrade to replication on that axis, not
+    KeyError inside ``mesh.shape``.
+    """
+    names = tuple(mesh.axis_names)
+    if axis is None:
+        return None
+    if isinstance(axis, (tuple, list)):
+        kept = tuple(a for a in axis if a in names)
+        if not kept:
+            return None
+        return kept if len(kept) > 1 else kept[0]
+    return axis if axis in names else None
+
+
+def _divides(mesh, axis, dim: int) -> bool:
+    return dim > 0 and dim % _axis_size(mesh, axis) == 0
+
+
 def data_axis(mesh):
     """The (possibly compound) data-parallel axis: pod folds into data."""
     if "pod" in tuple(mesh.axis_names):
@@ -77,10 +100,11 @@ def data_axis(mesh):
 
 
 def _validated(shape: Sequence[int], axes: Sequence[Any], mesh) -> P:
-    """Drop any proposed axis that does not divide its dim."""
+    """Drop any proposed axis absent from the mesh or not dividing its dim."""
     out = []
     for dim, ax in zip(shape, axes):
-        if ax is not None and dim % _axis_size(mesh, ax) == 0 and dim > 0:
+        ax = _present(mesh, ax)
+        if ax is not None and _divides(mesh, ax, dim):
             out.append(ax)
         else:
             out.append(None)
@@ -137,9 +161,10 @@ def param_shardings(params, mesh):
 # ------------------------------------------------------------------- batch
 def batch_pspec(mesh, batch_size: int, ndim: int) -> P:
     """Batch-dim data parallelism; replicate when the batch can't split
-    (e.g. the long_500k single-sequence shape)."""
-    dp = data_axis(mesh)
-    if batch_size % _axis_size(mesh, dp) != 0:
+    (e.g. the long_500k single-sequence shape) or the mesh has no data
+    axis (a model-only serve submesh)."""
+    dp = _present(mesh, data_axis(mesh))
+    if dp is None or not _divides(mesh, dp, batch_size):
         return P(*([None] * ndim))
     return P(dp, *([None] * (ndim - 1)))
 
@@ -161,7 +186,7 @@ def cache_pspec(path, leaf, mesh, batch: int) -> P:
     if not shape:
         return P()
     axes: list = [None] * len(shape)
-    dp = data_axis(mesh)
+    dp = _present(mesh, data_axis(mesh))
     names = _path_names(path)
 
     # Stacked leaves ([stack, B, ...]) carry batch at dim 1: KV/cross
@@ -183,12 +208,13 @@ def cache_pspec(path, leaf, mesh, batch: int) -> P:
             if d == batch:
                 bdim = i
                 break
-    if bdim is not None and batch % _axis_size(mesh, dp) == 0:
+    if bdim is not None and dp is not None and _divides(mesh, dp, batch):
         axes[bdim] = dp
 
     if len(shape) == 5 and bdim == 1:  # [stack, B, S, KV, hd] cache layout
-        if shape[2] > 1 and shape[2] % _axis_size(mesh, MODEL_AXIS) == 0:
-            axes[2] = MODEL_AXIS
+        mp = _present(mesh, MODEL_AXIS)
+        if mp is not None and shape[2] > 1 and _divides(mesh, mp, shape[2]):
+            axes[2] = mp
     return P(*axes)
 
 
@@ -199,3 +225,50 @@ def cache_shardings(state, mesh, batch: int):
     return jax.tree_util.tree_map_with_path(
         lambda path, leaf: NamedSharding(
             mesh, cache_pspec(path, leaf, mesh, batch)), state)
+
+
+# ------------------------------------------------------------------- serve
+# The device-resident batcher's donated pytree (serve.engine
+# DeviceContinuousBatcher): a decode-state subtree under "decode", flat
+# per-slot arrays, per-request output rings, and a scalar queue head.
+_SLOT_LEAVES = ("free", "req", "gen", "last", "hasf")
+_RING_LEAVES = ("out_tok", "out_len", "out_done", "out_drop")
+
+
+def serve_pspec(path, leaf, mesh, batch: int) -> P:
+    """PartitionSpec for one serve-state leaf.
+
+    * the ``decode`` subtree follows ``cache_pspec`` (batch over data,
+      KV sequence over model);
+    * per-slot arrays (``free``/``req``/``gen``/``last``/``hasf`` and the
+      ``[B, F]`` gate features) shard their slot dim over data;
+    * output rings replicate — they are drained to host every
+      ``sync_every`` steps, and a replicated ring keeps that drain one
+      local read instead of an all-gather per round trip;
+    * scalars (queue ``head``) replicate.
+    """
+    names = _path_names(path)
+    if names and names[0] == "decode":
+        return cache_pspec(path[1:], leaf, mesh, batch)
+    shape = tuple(leaf.shape)
+    name = names[-1] if names else ""
+    if not shape or name == "head" or name in _RING_LEAVES:
+        return P(*([None] * len(shape)))
+    if name in _SLOT_LEAVES or name == "feat":
+        return batch_pspec(mesh, shape[0], len(shape))
+    return P(*([None] * len(shape)))
+
+
+def serve_state_shardings(state, mesh, batch: int):
+    """Tree of NamedShardings for the device batcher's donated pytree."""
+    from jax.sharding import NamedSharding
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, serve_pspec(path, leaf, mesh, batch)), state)
+
+
+def queue_pspec(mesh, n_queue: int, ndim: int) -> P:
+    """Spec for the device FIFO queue / the batched admission-gate launch:
+    queue rows are data-parallel like any request batch."""
+    return batch_pspec(mesh, n_queue, ndim)

@@ -17,11 +17,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ref
+from .bnn_mlp import bnn_popcount_matmul_pallas
 from .bucketize import bucketize_pallas
 from .fused_eb import fused_eb_pallas
-from .ternary_match import ternary_match_pallas
 from .lb_lookup import lb_lookup_pallas
-from .bnn_mlp import bnn_popcount_matmul_pallas
+from .ternary_match import ternary_match_pallas
 
 _ON_TPU = any(d.platform == "tpu" for d in jax.devices())
 _INTERPRET = not _ON_TPU

@@ -35,3 +35,53 @@ def make_smoke_mesh(data: int = 1, model: int = 1):
 
     return Mesh(np.asarray(devices[:n]).reshape(data, model),
                 ("data", "model"))
+
+
+def make_serve_mesh(spec: str = "auto"):
+    """Serve mesh from a ``DATAxMODEL`` spec string (e.g. ``1x8``, ``2x4``).
+
+    ``auto`` spreads every visible device over the model axis of a
+    single data shard — the layout whose token streams are bit-identical
+    to the single-host batcher (one shard = one schedule).
+    """
+    import jax
+
+    devices = jax.devices()
+    if spec == "auto":
+        data, model = 1, len(devices)
+    else:
+        try:
+            d, _, m = spec.lower().partition("x")
+            data, model = int(d), int(m)
+            if data < 1 or model < 1:
+                raise ValueError
+        except ValueError:
+            raise ValueError(
+                f"mesh spec {spec!r} is not DATAxMODEL (e.g. 1x8)") from None
+    n = data * model
+    if len(devices) < n:
+        raise RuntimeError(
+            f"serve mesh {spec!r} needs {n} devices, found {len(devices)} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n} or shrink the mesh")
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(devices[:n]).reshape(data, model),
+                ("data", "model"))
+
+
+def data_submeshes(mesh):
+    """One ``("data", "model")`` mesh per data-parallel slice ("host").
+
+    Each slice keeps its model axis (tensor-parallel decode within the
+    host) and a size-1 data axis, so every sharding rule that names
+    ``data`` degrades to replication instead of erroring.
+    """
+    from jax.sharding import Mesh
+
+    devs = np.asarray(mesh.devices)
+    if tuple(mesh.axis_names) != ("data", "model"):
+        raise ValueError(
+            f"serve meshes are (data, model); got {mesh.axis_names}")
+    return [Mesh(devs[i: i + 1], ("data", "model"))
+            for i in range(devs.shape[0])]

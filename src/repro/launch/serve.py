@@ -6,6 +6,11 @@
     # device-resident continuous batching (the production hot path)
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
         --continuous --requests 64 --tokens 8 --gate rf --sync-every 16
+
+    # multi-host: shard over a data×model mesh behind the request router
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+        --continuous --mesh 2x4 --router --requests 64 --tokens 8
 """
 from __future__ import annotations
 
@@ -21,6 +26,7 @@ from ..core import PlanterConfig, plant
 from ..data import load_dataset
 from ..serve.engine import (ContinuousBatcher, DeviceContinuousBatcher,
                             ServeConfig, ServeEngine)
+from ..serve.router import ShardedServe
 
 
 def main(argv=None):
@@ -44,8 +50,22 @@ def main(argv=None):
                          "jitted step; host = per-token reference)")
     ap.add_argument("--sync-every", type=int, default=16,
                     help="device batcher: steps per host round trip")
+    ap.add_argument("--mesh", default=None,
+                    help="DATAxMODEL serve mesh (e.g. 1x8, 2x4) or 'auto'; "
+                         "implies --continuous --router")
+    ap.add_argument("--router", action="store_true",
+                    help="route requests across data-parallel shards "
+                         "(ShardedServe; --mesh picks the mesh, default "
+                         "auto)")
+    ap.add_argument("--rebalance-margin", type=int, default=None,
+                    help="router: queue-depth slack before a request "
+                         "spills off its home shard (default: max_batch)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.mesh and not args.router:
+        args.router = True
+    if args.router:
+        args.continuous = True
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     rng = np.random.default_rng(args.seed)
@@ -57,23 +77,36 @@ def main(argv=None):
         res = plant(PlanterConfig(model=args.gate, size="S"),
                     ds.X_train, ds.y_train, ds.X_test)
         gate = res.mapped
+        backend = (gate.select_backend() if args.gate_backend == "auto"
+                   else args.gate_backend)
         print(f"gate: {args.gate} parity={res.parity:.3f} "
-              f"resources={gate.resources()} "
-              f"backend={gate.select_backend() if args.gate_backend == 'auto' else args.gate_backend}")
+              f"resources={gate.resources()} backend={backend}")
 
     scfg = ServeConfig(max_batch=args.batch, cache_len=64)
-    engine = ServeEngine(cfg, params, scfg, gate=gate,
-                         gate_backend=args.gate_backend)
 
-    feats = ds.X_test[: args.requests]
+    # wrap around the test set so any --requests count is serveable
+    feats = ds.X_test[np.arange(args.requests) % len(ds.X_test)]
     if args.continuous:
-        if args.batcher == "device":
-            cb = DeviceContinuousBatcher(engine, eos_token=-1,
-                                         max_tokens=args.tokens,
-                                         sync_every=args.sync_every)
+        if args.router:
+            from .mesh import make_serve_mesh
+            mesh = make_serve_mesh(args.mesh or "auto")
+            cb = ShardedServe(cfg, params, scfg, mesh, gate=gate,
+                              gate_backend=args.gate_backend, eos_token=-1,
+                              max_tokens=args.tokens,
+                              sync_every=args.sync_every,
+                              rebalance_margin=args.rebalance_margin)
+            print(f"router: {cb.n_shards} shard(s) over mesh "
+                  f"{dict(mesh.shape)}")
         else:
-            cb = ContinuousBatcher(engine, eos_token=-1,
-                                   max_tokens=args.tokens)
+            engine = ServeEngine(cfg, params, scfg, gate=gate,
+                                 gate_backend=args.gate_backend)
+            if args.batcher == "device":
+                cb = DeviceContinuousBatcher(engine, eos_token=-1,
+                                             max_tokens=args.tokens,
+                                             sync_every=args.sync_every)
+            else:
+                cb = ContinuousBatcher(engine, eos_token=-1,
+                                       max_tokens=args.tokens)
         for rid in range(args.requests):
             cb.submit(rid, int(rng.integers(1, cfg.vocab_size)),
                       features=feats[rid])
@@ -81,12 +114,18 @@ def main(argv=None):
         done = cb.run(max_steps=100 * args.tokens)
         dt = time.perf_counter() - t0
         n_tok = sum(len(v) for v in done.values())
-        print(f"[{args.batcher}] served {len(done)} requests "
+        tag = "router" if args.router else args.batcher
+        print(f"[{tag}] served {len(done)} requests "
               f"(dropped {len(cb.dropped)}) — {n_tok} tokens in {dt:.2f}s "
               f"({n_tok / dt:.1f} tok/s)")
+        if args.router:
+            print(f"  per-shard served: "
+                  f"{[len(a) for a in cb.assigned]}")
         return done
 
     # request stream: (flow features, prompt) through one generate() batch
+    engine = ServeEngine(cfg, params, scfg, gate=gate,
+                         gate_backend=args.gate_backend)
     keep = engine.admit(feats)
     print(f"admitted {keep.sum()}/{len(keep)} requests "
           f"(dropped {100 * (1 - keep.mean()):.1f}% as attack traffic)")

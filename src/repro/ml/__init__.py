@@ -1,10 +1,10 @@
 """Host-side trainers (the paper's Model Trainer component)."""
-from .tree import DecisionTreeClassifier, XGBRegressionTree
-from .forest import RandomForestClassifier, XGBoostClassifier, IsolationForest
-from .linear import LinearSVM, PCA, Autoencoder
 from .bayes import CategoricalNB
-from .neighbors import KMeans, KNeighborsClassifier
 from .bnn import BinarizedMLP, bits_pm1
+from .forest import IsolationForest, RandomForestClassifier, XGBoostClassifier
+from .linear import Autoencoder, LinearSVM, PCA
+from .neighbors import KMeans, KNeighborsClassifier
+from .tree import DecisionTreeClassifier, XGBRegressionTree
 
 MODEL_REGISTRY = {
     "dt": DecisionTreeClassifier,

@@ -66,5 +66,6 @@ class KNeighborsClassifier:
                 :, : self.n_neighbors
             ]
             for j, row in enumerate(nn):
-                out[i + j] = np.bincount(self.y_[row], minlength=self.n_classes_).argmax()
+                out[i + j] = np.bincount(
+                    self.y_[row], minlength=self.n_classes_).argmax()
         return out

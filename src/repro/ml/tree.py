@@ -132,7 +132,8 @@ class _Builder:
             threshold=np.array([d["threshold"] for d in self.nodes], np.int64),
             left=np.array([d["left"] for d in self.nodes], np.int32),
             right=np.array([d["right"] for d in self.nodes], np.int32),
-            value=np.array([np.atleast_1d(d["value"]) for d in self.nodes]).reshape(n, K),
+            value=np.array([np.atleast_1d(d["value"])
+                            for d in self.nodes]).reshape(n, K),
             depth=np.array([d["depth"] for d in self.nodes], np.int32),
         )
         return out
@@ -259,9 +260,11 @@ class XGBRegressionTree:
                 change = np.where(xv[:-1] != xv[1:])[0]
                 for i in change:
                     nl = i + 1
-                    if nl < self.min_samples_leaf or len(xv) - nl < self.min_samples_leaf:
+                    if (nl < self.min_samples_leaf
+                            or len(xv) - nl < self.min_samples_leaf):
                         continue
-                    gain = score(gc[i], hc[i]) + score(G - gc[i], H - hc[i]) - score(G, H)
+                    gain = (score(gc[i], hc[i])
+                            + score(G - gc[i], H - hc[i]) - score(G, H))
                     if best is None or gain > best[0]:
                         best = (gain, f, int(xv[i]), order[: nl], order[nl:])
             if best is None or best[0] <= 1e-9:

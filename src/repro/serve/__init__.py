@@ -1,3 +1,6 @@
-from .engine import ServeConfig, ServeEngine
+from .engine import (ContinuousBatcher, DeviceContinuousBatcher, ServeConfig,
+                     ServeEngine)
+from .router import ShardedServe, stable_shard
 
-__all__ = ["ServeConfig", "ServeEngine"]
+__all__ = ["ContinuousBatcher", "DeviceContinuousBatcher", "ServeConfig",
+           "ServeEngine", "ShardedServe", "stable_shard"]

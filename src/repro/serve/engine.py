@@ -34,6 +34,7 @@ import numpy as np
 from ..arch import model as M
 from ..arch.config import ArchConfig
 from ..core.pipeline import MappedModel
+from ..dist import sharding as SH
 
 
 @dataclasses.dataclass
@@ -48,15 +49,33 @@ class ServeEngine:
 
     def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig,
                  gate: Optional[MappedModel] = None,
-                 gate_backend: str = "jnp"):
+                 gate_backend: str = "jnp", mesh=None):
         self.cfg = cfg
+        self.mesh = mesh
+        if mesh is not None:
+            # place once: params REPLICATED across the shard's devices,
+            # the decode cache per `dist.sharding.cache_pspec` (batch
+            # over data, KV sequence over model).  Tensor-parallel param
+            # sharding is deliberately not used on the serve path: the
+            # row-parallel psum reassociates the hidden-dim reduction
+            # and flips bf16 greedy argmaxes at deeper cache positions,
+            # breaking the bit-exact parity guarantee the serve bench
+            # asserts.  Replicated params + seq-sharded KV is bit-exact.
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            params = jax.device_put(
+                params, NamedSharding(mesh, PartitionSpec()))
         self.params = params
         self.scfg = scfg
         self.gate = gate
         # 'auto' resolves via MappedModel.select_backend (fused Pallas EB
         # kernel on TPU for gate-sized tables, jnp oracle elsewhere)
         self.gate_fn = gate.jax_predict(gate_backend) if gate else None
-        self.state = M.init_decode_state(cfg, scfg.max_batch, scfg.cache_len)
+        # the decode cache is lazy: only the host-driven paths (step /
+        # generate / ContinuousBatcher) touch engine.state, and
+        # DeviceContinuousBatcher keeps its own donated cache — eager
+        # allocation would double serve-path cache memory per shard
+        self._state = None
         self._step = jax.jit(
             lambda p, s, t: M.decode_step(p, s, t, cfg))
         self._sample = jax.jit(
@@ -79,6 +98,22 @@ class ServeEngine:
         else:
             self._fused = None
             self._fused_sample = None
+
+    @property
+    def state(self):
+        if self._state is None:
+            st = M.init_decode_state(self.cfg, self.scfg.max_batch,
+                                     self.scfg.cache_len)
+            if self.mesh is not None:
+                st = jax.device_put(
+                    st, SH.cache_shardings(st, self.mesh,
+                                           self.scfg.max_batch))
+            self._state = st
+        return self._state
+
+    @state.setter
+    def state(self, value):
+        self._state = value
 
     # ------------------------------------------------------------ admission
     def admit(self, features: np.ndarray) -> np.ndarray:
@@ -270,16 +305,23 @@ class DeviceContinuousBatcher:
 
     def __init__(self, engine: ServeEngine, eos_token: int = 0,
                  max_tokens: int = 32, sync_every: int = 8,
-                 pregate: bool = True):
+                 pregate: bool = True, mesh=None):
         self.engine = engine
         self.eos = int(eos_token)
         self.max_tokens = int(max_tokens)
         self.sync_every = max(1, int(sync_every))
         self.pregate = pregate
+        # mesh defaults to the engine's: a placed engine serves a placed
+        # batcher unless the caller explicitly overrides
+        self.mesh = engine.mesh if mesh is None else mesh
         scfg = engine.scfg
         self._B = scfg.max_batch
         self._decode = M.init_decode_state(engine.cfg, scfg.max_batch,
                                            scfg.cache_len)
+        if self.mesh is not None:
+            self._decode = jax.device_put(
+                self._decode, SH.cache_shardings(self._decode, self.mesh,
+                                                 self._B))
         self.queue: collections.deque = collections.deque()
         self.done: dict = {}
         self.done_at: dict = {}
@@ -296,6 +338,11 @@ class DeviceContinuousBatcher:
             request_id, int(prompt_token),
             None if features is None else np.asarray(features)))
         return True
+
+    def pending_work(self) -> int:
+        """Un-served load: queued entries + in-flight carryover slots
+        (the router's rebalancing signal)."""
+        return len(self.queue) + sum(c is not None for c in self._carry)
 
     # ------------------------------------------------------------- step fn
     def _make_run_k(self, n_queue: int, n_out: int, n_feat: int) -> Callable:
@@ -461,12 +508,25 @@ class DeviceContinuousBatcher:
             "out_done": jnp.zeros(R, bool),
             "out_drop": jnp.zeros(R, bool),
         }
+        args = (jnp.asarray(qtok), jnp.asarray(qreq), jnp.asarray(qfeat),
+                jnp.asarray(qhasf), jnp.int32(n))
+        if self.mesh is not None:
+            # place the donated slot pytree (decode cache per cache_pspec,
+            # slot arrays over data, rings replicated for the host drain)
+            # and the device FIFO queue; every subsequent run_k call then
+            # computes under GSPMD on the mesh
+            from jax.sharding import NamedSharding
+
+            st = jax.device_put(
+                st, SH.serve_state_shardings(st, self.mesh, B))
+            args = tuple(
+                jax.device_put(a, NamedSharding(
+                    self.mesh, SH.queue_pspec(self.mesh, Nq, a.ndim)))
+                for a in args[:4]) + args[4:]
         key = (Nq, R, n_feat)
         if key not in self._run_k:
             self._run_k[key] = self._make_run_k(Nq, R, n_feat)
         run_k = self._run_k[key]
-        args = (jnp.asarray(qtok), jnp.asarray(qreq), jnp.asarray(qfeat),
-                jnp.asarray(qhasf), jnp.int32(n))
 
         seen = np.zeros(R, bool)
         remaining = max_steps

@@ -1,0 +1,181 @@
+"""Cross-host request router over data-parallel serve shards.
+
+``ShardedServe`` is the multi-host face of the serve path: a
+``("data", "model")`` mesh is split into one submesh per data slice (a
+"host"), each running its own placed ``ServeEngine`` +
+``DeviceContinuousBatcher`` — params replicated across the slice (see
+``ServeEngine``: TP param sharding would reassociate the row-parallel
+psum and break bit-exact greedy decode), the donated slot pytree placed
+with ``dist.sharding.serve_state_shardings`` (KV sequence sharded over
+the slice's ``model`` axis), and the fused gate+decode+sample+evict
+step still ONE jitted ``lax.while_loop`` per shard (``sync_every``
+unchanged).
+
+Routing and drain semantics:
+
+* requests hash (stable CRC32 of ``repr(request_id)``) to their home
+  shard; a shard whose queue depth exceeds the shallowest queue by more
+  than ``rebalance_margin`` spills new arrivals to the shallowest shard;
+* FIFO order is preserved *within* a shard — rebalancing only picks the
+  shard, never reorders a shard's queue;
+* admission is ONE batched Planter-gate launch over the whole pending
+  wave, its feature matrix placed with ``dist.sharding.queue_pspec``
+  (data-parallel rows) on the full mesh;
+* ``run()`` drains every shard and merges the per-shard done masks,
+  timestamps and drop lists into one host-side view (``done`` /
+  ``done_at`` / ``dropped``), mirroring the single-batcher API.
+
+On a ``1xM`` mesh there is exactly one shard, so the schedule — and
+therefore every token stream — is bit-identical to the single-host
+``DeviceContinuousBatcher`` (asserted by ``benchmarks/serve_bench.py
+--mesh 1x8``).  Multi-shard meshes preserve that guarantee per shard:
+each shard's streams match a single-host batcher fed the same requests
+in the same order.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist import sharding as SH
+from ..launch.mesh import data_submeshes
+from .engine import DeviceContinuousBatcher, ServeConfig, ServeEngine
+
+
+def stable_shard(request_id: Any, n_shards: int) -> int:
+    """Deterministic home shard for a request id (CRC32, not ``hash()`` —
+    Python string hashing is salted per process and would re-route
+    requests across restarts)."""
+    return zlib.crc32(repr(request_id).encode()) % n_shards
+
+
+class ShardedServe:
+    """Data-parallel serve shards behind one submit/run interface."""
+
+    def __init__(self, cfg, params, scfg: ServeConfig, mesh, *,
+                 gate=None, gate_backend: str = "jnp", eos_token: int = 0,
+                 max_tokens: int = 32, sync_every: int = 8,
+                 rebalance_margin: Optional[int] = None):
+        self.mesh = mesh
+        self.submeshes = data_submeshes(mesh)
+        self.n_shards = len(self.submeshes)
+        # depth slack before a request spills off its home shard; one
+        # full slot wave by default
+        self.rebalance_margin = (scfg.max_batch if rebalance_margin is None
+                                 else int(rebalance_margin))
+        self.engines = [
+            ServeEngine(cfg, params, scfg, gate=gate,
+                        gate_backend=gate_backend, mesh=sm)
+            for sm in self.submeshes]
+        # pregate=False: the router already gated the wave (one sharded
+        # launch in _route), so a per-shard pre-admission launch would
+        # re-derive all-keep verdicts; the in-step gate is a no-op for
+        # admitted requests, leaving the schedule identical to a
+        # single-host batcher fed the same (kept) queue
+        self.batchers = [
+            DeviceContinuousBatcher(eng, eos_token=eos_token,
+                                    max_tokens=max_tokens,
+                                    sync_every=sync_every, pregate=False)
+            for eng in self.engines]
+        self._gate_fn = self.engines[0].gate_fn
+        self._drop = scfg.gate_action_drop
+        self.pending: List[tuple] = []
+        self.assigned: List[List[Any]] = [[] for _ in range(self.n_shards)]
+        self.done: dict = {}
+        self.done_at: dict = {}
+        self._adm_dropped: List[Any] = []
+        self.dropped: List[Any] = []
+
+    # ------------------------------------------------------------ admission
+    def admit(self, features: np.ndarray) -> np.ndarray:
+        """Batched gate launch over a request wave, data-parallel rows.
+
+        The feature matrix is placed with ``queue_pspec`` on the full
+        mesh, so the one launch the router makes per wave runs sharded
+        over every host's devices.
+        """
+        if self._gate_fn is None:
+            return np.ones(len(features), bool)
+        from jax.sharding import NamedSharding
+
+        x = jax.device_put(
+            jnp.asarray(features),
+            NamedSharding(self.mesh,
+                          SH.queue_pspec(self.mesh, len(features), 2)))
+        return np.asarray(self._gate_fn(x)) != self._drop
+
+    # -------------------------------------------------------------- routing
+    def submit(self, request_id, prompt_token: int,
+               features: Optional[np.ndarray] = None):
+        """Enqueue; admission + shard placement happen batched in
+        ``run()`` so routing sees whole-wave queue depths."""
+        self.pending.append((
+            request_id, int(prompt_token),
+            None if features is None else np.asarray(features)))
+        return True
+
+    def queue_depths(self) -> List[int]:
+        """Un-served load per shard: device queue + in-flight slots."""
+        return [b.pending_work() for b in self.batchers]
+
+    def _route(self):
+        pending, self.pending = self.pending, []
+        keep = np.ones(len(pending), bool)
+        gated = [i for i, (_, _, f) in enumerate(pending) if f is not None]
+        if gated and self._gate_fn is not None:
+            keep[gated] = self.admit(
+                np.stack([pending[i][2] for i in gated]))
+        depth = self.queue_depths()
+        for k, (rid, tok, feat) in enumerate(pending):
+            if not keep[k]:
+                self._adm_dropped.append(rid)
+                continue
+            s = stable_shard(rid, self.n_shards)
+            if depth[s] - min(depth) > self.rebalance_margin:
+                s = int(np.argmin(depth))  # spill to the shallowest queue
+            self.batchers[s].submit(rid, tok, features=feat)
+            self.assigned[s].append(rid)
+            depth[s] += 1
+
+    # ----------------------------------------------------------------- run
+    def _merge(self):
+        """Fold the per-shard done masks into the single host view."""
+        for b in self.batchers:
+            self.done.update(b.done)
+            self.done_at.update(b.done_at)
+        self.dropped = self._adm_dropped + [
+            rid for b in self.batchers for rid in b.dropped]
+
+    def run(self, max_steps: int = 1000,
+            drain_chunk: Optional[int] = None) -> dict:
+        """Route the pending wave, drain every shard, merge results.
+
+        ``max_steps`` is a per-shard decode budget (matching the
+        single-batcher semantics); unfinished work carries over to the
+        next ``run()`` exactly as in ``DeviceContinuousBatcher``.
+        ``drain_chunk`` bounds each shard's turn so shards interleave
+        (latency fairness on a single process); the default drains each
+        shard fully — outputs are identical either way because bounded
+        runs resume the exact schedule.
+        """
+        self._route()
+        if drain_chunk is not None:
+            drain_chunk = max(1, int(drain_chunk))  # 0 would never progress
+        budgets = [max_steps] * self.n_shards
+        while True:
+            ran = False
+            for s, b in enumerate(self.batchers):
+                if budgets[s] <= 0 or not b.pending_work():
+                    continue
+                chunk = (budgets[s] if drain_chunk is None
+                         else min(drain_chunk, budgets[s]))
+                b.run(max_steps=chunk)
+                budgets[s] -= chunk
+                ran = True
+            self._merge()
+            if not ran:
+                return self.done

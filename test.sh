@@ -2,14 +2,37 @@
 # CI entrypoint: run the suite with 8 fake XLA host devices so the
 # multi-device sharding/pipeline tests exercise real shardings on
 # CPU-only runners (see README.md §Testing).
-set -euo pipefail
+#
+# Phases (each failure is reported distinctly, with its own exit code,
+# so a serve-bench break is never mistaken for a pytest failure):
+#   serve-bench-smoke    tiny CPU run of both batcher paths   (exit 41)
+#   serve-bench-sharded  sharded router parity on a 1xN mesh  (exit 42)
+#   pytest               the tier-1 suite                     (pytest's)
+set -uo pipefail
 cd "$(dirname "$0")"
 
 export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
 
-# serve-benchmark rot-check: tiny CPU run of both batcher paths
-# (parity asserted, no timing thresholds)
-PYTHONPATH=src:. python -m benchmarks.serve_bench --smoke \
-    --out /tmp/BENCH_serve_smoke.json
+fail() { # phase-name exit-code
+    echo "" >&2
+    echo "[test.sh] FAILED phase: $1 (exit $2)" >&2
+    exit "$2"
+}
 
-exec python -m pytest -x -q "$@"
+echo "[test.sh] phase: serve-bench-smoke"
+PYTHONPATH=src:. python -m benchmarks.serve_bench --smoke \
+    --out /tmp/BENCH_serve_smoke.json \
+    || fail serve-bench-smoke 41
+
+# sharded serve rot-check: route over every fake device on one data
+# shard — token streams must be bit-identical to the single-host batcher
+echo "[test.sh] phase: serve-bench-sharded"
+PYTHONPATH=src:. python -m benchmarks.serve_bench --smoke --mesh auto \
+    --out /tmp/BENCH_serve_sharded.json \
+    || fail serve-bench-sharded 42
+
+echo "[test.sh] phase: pytest"
+python -m pytest -x -q "$@"
+rc=$?
+[ "$rc" -ne 0 ] && fail pytest "$rc"
+echo "[test.sh] all phases passed"

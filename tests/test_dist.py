@@ -83,6 +83,82 @@ def test_cache_pspec_seq_sharded():
     assert spec == P(None, "data", "model", None, None)
 
 
+def test_cache_pspec_batch_not_dividing():
+    """A batch that does not divide the data axis replicates instead of
+    erroring — the sharded serve path admits ragged waves."""
+    mesh = _fake_mesh(data=16, model=16)
+    leaf = jax.ShapeDtypeStruct((4, 3, 2048, 2, 64), jnp.bfloat16)
+    assert SH.cache_pspec((), leaf, mesh, 3) == P(
+        None, None, "model", None, None)
+    # sequence not dividing model either -> fully replicated
+    leaf = jax.ShapeDtypeStruct((4, 3, 100, 2, 64), jnp.bfloat16)
+    assert SH.cache_pspec((), leaf, mesh, 3) == P(
+        None, None, None, None, None)
+
+
+def test_cache_pspec_missing_axes_degrade():
+    """Meshes narrower than (data, model) — e.g. a per-host serve slice —
+    must degrade the absent axis to replication, not KeyError."""
+
+    class _AxisMesh:
+        def __init__(self, **shape):
+            self.axis_names = tuple(shape)
+            self.shape = shape
+
+    leaf = jax.ShapeDtypeStruct((4, 8, 64, 2, 64), jnp.bfloat16)
+    assert SH.cache_pspec((), leaf, _AxisMesh(model=8), 8) == P(
+        None, None, "model", None, None)
+    assert SH.cache_pspec((), leaf, _AxisMesh(data=8), 8) == P(
+        None, "data", None, None, None)
+    assert SH.batch_pspec(_AxisMesh(model=8), 64, 2) == P(None, None)
+
+
+def test_cache_shardings_place_on_small_mesh():
+    """End to end on real devices: a decode state whose batch does NOT
+    divide the data axis still places (replicated batch dim)."""
+    if jax.device_count() < 2:
+        pytest.skip("needs >=2 devices (run under test.sh)")
+    from repro.launch.mesh import make_smoke_mesh
+
+    mesh = make_smoke_mesh(2, 1)
+    cfg = get_smoke_config("qwen2_1_5b")
+    for batch in (3, 4):  # 3 % 2 != 0 (replicates), 4 % 2 == 0 (shards)
+        state = M.init_decode_state(cfg, batch, 64)
+        placed = jax.device_put(
+            state, SH.cache_shardings(state, mesh, batch))
+        kv_spec = placed["kv"][0].sharding.spec
+        assert kv_spec[1] == ("data" if batch == 4 else None)
+
+
+def test_serve_pspec_rules():
+    """The device batcher's donated pytree: slot arrays shard over data,
+    rings and scalars replicate, the decode subtree follows cache rules."""
+    mesh = _fake_mesh(data=8, model=16)
+    B, R, T = 16, 32, 8
+    st = {
+        "decode": {"kv": jax.ShapeDtypeStruct((4, B, 2048, 2, 64),
+                                              jnp.bfloat16)},
+        "free": jax.ShapeDtypeStruct((B,), jnp.bool_),
+        "gen": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "feat": jax.ShapeDtypeStruct((B, 7), jnp.int32),
+        "head": jax.ShapeDtypeStruct((), jnp.int32),
+        "out_tok": jax.ShapeDtypeStruct((R, T), jnp.int32),
+        "out_done": jax.ShapeDtypeStruct((R,), jnp.bool_),
+    }
+    specs = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: SH.serve_pspec(path, leaf, mesh, B), st)
+    assert specs["decode"]["kv"] == P(None, "data", "model", None, None)
+    assert specs["free"] == P("data")
+    assert specs["gen"] == P("data")
+    assert specs["feat"] == P("data", None)
+    assert specs["head"] == P()
+    assert specs["out_tok"] == P(None, None)  # rings drain to host
+    assert specs["out_done"] == P(None)
+    # queue rows are data-parallel like any batch; ragged queues replicate
+    assert SH.queue_pspec(mesh, 64, 2) == P("data", None)
+    assert SH.queue_pspec(mesh, 9, 2) == P(None, None)
+
+
 def test_compression_lossless_in_the_limit():
     """Property: with *varying* per-step gradients, the accumulated
     dequantized gradient tracks the true gradient sum up to a single

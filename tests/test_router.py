@@ -1,0 +1,140 @@
+"""Cross-host serve router: hashing, FIFO hand-off, parity, rebalance.
+
+The bit-parity contract: on one data shard the router IS the single-host
+device batcher (same schedule, same streams); on many shards each
+shard's streams match a single-host batcher fed the same requests in
+the same order.  These tests pin the contract the serve bench asserts
+end to end (``benchmarks/serve_bench.py --mesh ...``).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.arch import model as M
+from repro.configs import get_smoke_config
+from repro.core import PlanterConfig, plant
+from repro.data import load_dataset
+from repro.launch.mesh import data_submeshes, make_serve_mesh
+from repro.serve.engine import (ContinuousBatcher, DeviceContinuousBatcher,
+                                ServeConfig, ServeEngine)
+from repro.serve.router import ShardedServe, stable_shard
+
+DS = load_dataset("unsw", n=2000)
+MAX_TOKENS = 3
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("qwen2_1_5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    gate = plant(PlanterConfig(model="rf", size="S"), DS.X_train,
+                 DS.y_train, None).mapped
+    return cfg, params, ServeConfig(max_batch=4, cache_len=32), gate
+
+
+def _submit_all(cb, n=10, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = {}
+    for rid in range(n):
+        toks[rid] = int(rng.integers(1, 100))
+        cb.submit(rid, toks[rid], features=DS.X_test[rid])
+    return toks
+
+
+def test_stable_shard_deterministic():
+    assert stable_shard("req-42", 8) == stable_shard("req-42", 8)
+    assert stable_shard(("a", 1), 4) == stable_shard(("a", 1), 4)
+    hits = {stable_shard(i, 4) for i in range(64)}
+    assert hits == {0, 1, 2, 3}  # all shards reachable
+
+
+def test_mesh_helpers():
+    with pytest.raises(ValueError):
+        make_serve_mesh("not-a-mesh")
+    with pytest.raises(RuntimeError):
+        make_serve_mesh(f"{jax.device_count() + 1}x2")
+    mesh = make_serve_mesh("auto")
+    subs = data_submeshes(mesh)
+    assert len(subs) == 1  # auto = one shard over every device
+    assert int(subs[0].shape["model"]) == jax.device_count()
+
+
+def test_single_shard_router_bit_parity(setup):
+    """One data shard: the router's multi-wave token streams are
+    bit-identical to the single-host batcher's (the serve-bench 1x8
+    acceptance property, at test scale)."""
+    cfg, params, scfg, gate = setup
+    host = ContinuousBatcher(ServeEngine(cfg, params, scfg, gate=gate),
+                             eos_token=-1, max_tokens=MAX_TOKENS)
+    toks = _submit_all(host)
+    done_h = host.run(max_steps=200)
+
+    router = ShardedServe(cfg, params, scfg, make_serve_mesh("auto"),
+                          gate=gate, eos_token=-1, max_tokens=MAX_TOKENS,
+                          sync_every=2)
+    _submit_all(router)
+    done_r = router.run(max_steps=200)
+    assert done_r == done_h
+    assert sorted(router.dropped) == sorted(host.dropped)
+    assert toks  # workload non-trivial
+
+
+def test_multi_shard_fifo_and_per_shard_parity(setup):
+    """Hand-off preserves FIFO order within a shard, and each shard's
+    streams match a fresh single-host batcher fed the same requests."""
+    if jax.device_count() < 2:
+        pytest.skip("needs >=2 devices (run under test.sh)")
+    cfg, params, scfg, gate = setup
+    mesh = make_serve_mesh(f"2x{jax.device_count() // 2}")
+    router = ShardedServe(cfg, params, scfg, mesh, gate=gate, eos_token=-1,
+                          max_tokens=MAX_TOKENS, sync_every=2)
+    toks = _submit_all(router)
+    done = router.run(max_steps=200)
+
+    admitted = [r for r in toks if r not in router.dropped]
+    assert sorted(done) == sorted(admitted)
+    assert sum(len(a) for a in router.assigned) == len(admitted)
+    for rids in router.assigned:
+        # FIFO within the shard: assignment order == submission order
+        assert rids == sorted(rids)
+        ref = DeviceContinuousBatcher(
+            ServeEngine(cfg, params, scfg, gate=gate), eos_token=-1,
+            max_tokens=MAX_TOKENS, sync_every=2)
+        for rid in rids:
+            ref.submit(rid, toks[rid], features=DS.X_test[rid])
+        ref_done = ref.run(max_steps=200)
+        for rid in rids:
+            assert done[rid] == ref_done[rid]
+
+
+def test_interleaved_drain_identical(setup):
+    """drain_chunk interleaves shards via bounded resumable runs; the
+    merged done mask is identical to full per-shard drains."""
+    if jax.device_count() < 2:
+        pytest.skip("needs >=2 devices (run under test.sh)")
+    cfg, params, scfg, gate = setup
+    mesh = make_serve_mesh(f"2x{jax.device_count() // 2}")
+    a = ShardedServe(cfg, params, scfg, mesh, gate=gate, eos_token=-1,
+                     max_tokens=MAX_TOKENS, sync_every=2)
+    b = ShardedServe(cfg, params, scfg, mesh, gate=gate, eos_token=-1,
+                     max_tokens=MAX_TOKENS, sync_every=2)
+    _submit_all(a)
+    _submit_all(b)
+    assert a.run(max_steps=200) == b.run(max_steps=200, drain_chunk=2)
+
+
+def test_rebalance_spills_to_shallowest(setup):
+    """With zero depth slack, routing levels the queues regardless of
+    where requests hash."""
+    cfg, params, scfg, gate = setup
+    if jax.device_count() < 2:
+        pytest.skip("needs >=2 devices (run under test.sh)")
+    mesh = make_serve_mesh(f"{jax.device_count()}x1")
+    router = ShardedServe(cfg, params, scfg, mesh, gate=None, eos_token=-1,
+                          max_tokens=MAX_TOKENS, rebalance_margin=0)
+    for rid in range(4 * router.n_shards):
+        router.submit(rid, rid + 1)
+    router._route()
+    depths = router.queue_depths()
+    assert max(depths) - min(depths) <= 1
+    assert sum(depths) == 4 * router.n_shards
