@@ -1,16 +1,21 @@
 """Bench regression gate: compare a fresh serve-bench run to the
 checked-in baseline.
 
-Parity is a *hard* gate — a sharded or device-resident batcher whose
-token streams diverge from the host reference fails CI.  Timing is
-warn-only: CI runners are noisy, so a tokens/s drop prints a ``::warning``
-annotation (visible in the GitHub checks UI) without failing the job.
+Parity is a *hard* gate — a sharded, device-resident, or chunked-prefill
+batcher whose token streams diverge from the host reference fails CI.
+Timing is warn-only: CI runners are noisy, so a tokens/s drop prints a
+``::warning`` annotation (visible in the GitHub checks UI) without
+failing the job.  The fresh run is also validated against a small
+schema, so a bench refactor that silently stops emitting a section
+(e.g. the prefill scenario) is a hard failure, not a silently-passing
+gate.
 
     python -m benchmarks.check_regression NEW.json BENCH_serve.json
     python -m benchmarks.check_regression NEW.json BASE.json --timing-tol 0.5
 
 Exit codes: 0 = ok (possibly with timing warnings), 1 = correctness
-regression (parity break, zero completions, or malformed input).
+regression (parity break, zero completions, schema violation, or
+malformed input).
 """
 from __future__ import annotations
 
@@ -18,22 +23,126 @@ import argparse
 import json
 import sys
 
+# (path, type, required) — the shape BENCH_serve.json must have for the
+# gate to mean anything.  ``sharded`` is optional (mesh runs only).
+_NUM = (int, float)
+_SCHEMA = [
+    (("arch",), str, True),
+    (("requests",), int, True),
+    (("batch",), int, True),
+    (("old",), dict, True),
+    (("new",), dict, True),
+    (("old", "tokens_per_s"), _NUM, True),
+    (("new", "tokens_per_s"), _NUM, True),
+    (("old", "completed"), int, True),
+    (("new", "completed"), int, True),
+    (("old", "drop_reasons"), dict, True),
+    (("new", "drop_reasons"), dict, True),
+    (("speedup",), _NUM, True),
+    (("parity",), bool, True),
+    (("prefill",), dict, True),
+    (("prefill", "page_size"), int, True),
+    (("prefill", "prefill_chunk"), int, True),
+    (("prefill", "old"), dict, True),
+    (("prefill", "new"), dict, True),
+    (("prefill", "old", "tokens_per_s"), _NUM, True),
+    (("prefill", "new", "tokens_per_s"), _NUM, True),
+    (("prefill", "speedup"), _NUM, True),
+    (("prefill", "parity"), bool, True),
+    (("prefill", "cache_tokens_dense"), int, True),
+    (("prefill", "cache_tokens_paged"), int, True),
+    (("sharded",), dict, False),
+    (("sharded", "parity"), bool, False),
+    (("sharded", "paged_vs_dense_parity"), bool, False),
+]
+
+
+def validate_schema(new: dict) -> list:
+    """Check the fresh bench json against the expected shape; returns a
+    list of violations (empty = valid)."""
+    failures = []
+    for path, typ, required in _SCHEMA:
+        node, missing = new, False
+        for key in path:
+            if not isinstance(node, dict) or key not in node:
+                missing = True
+                break
+            node = node[key]
+        if missing:
+            if required:
+                failures.append(f"missing key {'.'.join(path)}")
+            elif len(path) == 1:
+                continue  # optional section absent: fine
+            elif path[0] in new:
+                failures.append(
+                    f"missing key {'.'.join(path)} (section present)")
+            continue
+        if not isinstance(node, typ):
+            failures.append(
+                f"key {'.'.join(path)} has type "
+                f"{type(node).__name__}, expected "
+                f"{typ.__name__ if isinstance(typ, type) else 'number'}")
+    return failures
+
 
 def check(new: dict, base: dict, timing_tol: float = 0.5) -> int:
     failures = []
     warnings = []
 
+    failures += [f"schema: {v}" for v in validate_schema(new)]
+
     if not new.get("parity"):
         failures.append("device-resident batcher lost exact parity with "
                         "the host batcher")
     sharded = new.get("sharded")
-    if sharded is not None and not sharded.get("parity"):
-        failures.append(
-            f"sharded serve (mesh {sharded.get('mesh')}) lost "
-            f"{sharded.get('parity_mode')} parity")
+    if sharded is not None:
+        if not sharded.get("parity"):
+            failures.append(
+                f"sharded serve (mesh {sharded.get('mesh')}) lost "
+                f"{sharded.get('parity_mode')} parity")
+        if not sharded.get("paged_vs_dense_parity"):
+            failures.append(
+                f"paged-cache decode diverged from the dense cache on "
+                f"mesh {sharded.get('mesh')}")
     for path_name in ("old", "new"):
         if new.get(path_name, {}).get("completed", 0) <= 0:
             failures.append(f"{path_name} path completed zero requests")
+
+    prefill = new.get("prefill", {})
+    if isinstance(prefill, dict) and prefill:
+        # chunked prefill: parity is the hard gate, tokens/s warns
+        if not prefill.get("parity"):
+            failures.append("chunked paged prefill lost exact parity "
+                            "with token-by-token seeding")
+        pf_sharded = prefill.get("sharded")
+        if pf_sharded is not None and not pf_sharded.get("parity"):
+            failures.append(
+                f"sharded chunked prefill (mesh {pf_sharded.get('mesh')}) "
+                f"lost {pf_sharded.get('parity_mode')} parity")
+        for path_name in ("old", "new"):
+            if prefill.get(path_name, {}).get("completed", 0) <= 0:
+                failures.append(
+                    f"prefill {path_name} path completed zero requests")
+        if (prefill.get("cache_tokens_paged", 0)
+                >= prefill.get("cache_tokens_dense", 1)):
+            failures.append(
+                "paged pool no longer undercuts the dense cache "
+                f"footprint ({prefill.get('cache_tokens_paged')} vs "
+                f"{prefill.get('cache_tokens_dense')} cache tokens)")
+        base_pf = base.get("prefill", {}).get("new", {}).get("tokens_per_s")
+        new_pf = prefill.get("new", {}).get("tokens_per_s")
+        same_scale = new.get("requests") == base.get("requests")
+        if base_pf and new_pf and same_scale \
+                and new_pf < (1.0 - timing_tol) * base_pf:
+            warnings.append(
+                f"prefill throughput {new_pf:.0f} tok/s is "
+                f"{100 * (1 - new_pf / base_pf):.0f}% below the baseline "
+                f"{base_pf:.0f} tok/s (warn-only: CI timing is noisy)")
+        pf_speedup = prefill.get("speedup")
+        if pf_speedup and pf_speedup < 1.0:
+            warnings.append(
+                f"chunked prefill slower than token-by-token "
+                f"({pf_speedup:.2f}x)")
 
     base_tps = base.get("new", {}).get("tokens_per_s")
     new_tps = new.get("new", {}).get("tokens_per_s")
@@ -64,6 +173,7 @@ def check(new: dict, base: dict, timing_tol: float = 0.5) -> int:
         return 1
     print(f"bench gate ok: parity={new.get('parity')}"
           + (f", sharded={sharded.get('parity')}" if sharded else "")
+          + f", prefill={new.get('prefill', {}).get('parity')}"
           + f", {len(warnings)} timing warning(s)")
     return 0
 

@@ -1,27 +1,46 @@
 """Continuous-batching serve benchmark: host-driven vs device-resident.
 
-Measures the ``repro.serve`` batchers on the same request stream — the
-seed ``ContinuousBatcher`` (one jit dispatch + one logits sync per
-token) against ``DeviceContinuousBatcher`` (slot state + queue + sampling
-+ eviction fused into one jitted step, host sync every ``sync_every``
-steps) — and emits ``BENCH_serve.json`` with tokens/s and p50/p99
-per-request latency for both paths plus the exact-parity verdict.
+Two scenarios over the same ``repro.serve`` engines:
+
+* **decode** (the original): single-token prompts; the seed
+  ``ContinuousBatcher`` (one jit dispatch + one logits sync per token)
+  against ``DeviceContinuousBatcher`` (slot state + queue + sampling +
+  eviction fused into one jitted step, host sync every ``sync_every``
+  steps).
+* **prefill** (prefill-heavy: long variable-length prompts, short
+  decodes): both paths run the *paged* (block-table) KV cache with
+  per-slot position offsets; the host batcher seeds prompts token by
+  token (one launch + one sync per prompt token) while the device path
+  consumes ``prefill_chunk`` prompt tokens per fused step.  The paged
+  pool is sized to the workload's reservation demand — strictly less
+  cache memory than the dense ``[B, cache_len]`` layout needs for the
+  same live slots.
+
+``BENCH_serve.json`` gets tokens/s + p50/p99 per-request latency for
+every path, per-request drop reasons (queue-full vs gate-reject), and
+the exact-parity verdicts (all hard-asserted).
 
 ``--mesh DATAxMODEL`` additionally runs the sharded serve path
 (``ShardedServe`` router over per-host placed engines) and asserts
 parity: on a single data shard (``1x8``) the full multi-wave token
 stream must be bit-identical to the single-host batcher; on multi-shard
 meshes each shard's streams must match a single-host batcher fed the
-same requests in the same order (FIFO hand-off preserved).
+same requests in the same order (FIFO hand-off preserved).  Mesh runs
+also assert the paged cache against the *dense* cache: on a one-wave
+workload (every slot starting at position 0, where the two caches'
+semantics coincide) the paged router's streams must be bit-identical to
+a dense single-host batcher, per shard.
 
     PYTHONPATH=src:. python -m benchmarks.serve_bench            # quick
     PYTHONPATH=src:. python -m benchmarks.serve_bench --smoke    # CI rot-check
     PYTHONPATH=src:. python -m benchmarks.serve_bench --smoke --mesh 1x8
+    PYTHONPATH=src:. python -m benchmarks.serve_bench --scenario prefill
     PYTHONPATH=src:. python -m benchmarks.serve_bench --full
 """
 from __future__ import annotations
 
 import argparse
+import collections
 import json
 import time
 
@@ -33,15 +52,26 @@ from repro.configs import get_smoke_config
 from repro.core import PlanterConfig, plant
 from repro.data import load_dataset
 from repro.serve.engine import (ContinuousBatcher, DeviceContinuousBatcher,
-                                ServeConfig, ServeEngine)
+                                ServeConfig, ServeEngine, page_demand)
 
 from .common import emit
 
 SYNC_EVERY = 32
+PAGE_SIZE = 16
+PREFILL_CHUNK = 8
+
+
+def _prompt(i: int, max_len: int):
+    """Deterministic variable-length prompt for request ``i`` (len in
+    [max(1, max_len//3), max_len])."""
+    lo = max(1, max_len // 3)
+    plen = lo + (i * 5) % (max_len - lo + 1)
+    return [(i * 7 + j) % 97 + 1 for j in range(plen)]
 
 
 def _bench_path(make_batcher, cfg, params, gate, ds, *, requests: int,
-                max_tokens: int, repeats: int, batch: int, cache_len: int):
+                max_tokens: int, repeats: int, batch: int, cache_len: int,
+                page_size: int = 0, pages: int = 0, prompt_len: int = 1):
     """Run one batcher over the request stream; best-of-``repeats``.
 
     ``make_batcher(cfg, params, scfg, gate)`` builds the path under test
@@ -51,28 +81,32 @@ def _bench_path(make_batcher, cfg, params, gate, ds, *, requests: int,
     jit by queue size), so the timed repeats measure steady-state
     serving only.
     """
-    scfg = ServeConfig(max_batch=batch, cache_len=cache_len)
+    scfg = ServeConfig(max_batch=batch, cache_len=cache_len,
+                       page_size=page_size, pages=pages)
     cb = make_batcher(cfg, params, scfg, gate)
 
     def submit_wave(tag):
         rids = []
         for i in range(requests):
             rid = (tag, i)
-            cb.submit(rid, int(i % 97 + 1), features=ds.X_test[i])
+            tok = (_prompt(i, prompt_len) if prompt_len > 1
+                   else int(i % 97 + 1))
+            cb.submit(rid, tok, features=ds.X_test[i])
             rids.append(rid)
         return rids
 
     submit_wave("warm")
-    cb.run(max_steps=100 * max_tokens)
+    cb.run(max_steps=100 * (max_tokens + prompt_len))
 
     best = None
     for rep in range(repeats):
         rids = submit_wave(rep)
         t0 = time.perf_counter()
-        cb.run(max_steps=100 * max_tokens)
+        cb.run(max_steps=100 * (max_tokens + prompt_len))
         dt = time.perf_counter() - t0
         lat = [cb.done_at[r] - t0 for r in rids if r in cb.done_at]
         n_tok = sum(len(cb.done[r]) for r in rids if r in cb.done)
+        wave = set(rids)
         res = {
             "wall_s": dt,
             "tokens": n_tok,
@@ -80,7 +114,9 @@ def _bench_path(make_batcher, cfg, params, gate, ds, *, requests: int,
             "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat else None,
             "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat else None,
             "completed": sum(r in cb.done for r in rids),
-            "dropped": sum(1 for r in cb.dropped if r in set(rids)),
+            "dropped": sum(1 for r in cb.dropped if r in wave),
+            "drop_reasons": dict(collections.Counter(
+                cb.drop_reasons[r] for r in cb.dropped if r in wave)),
         }
         if best is None or res["tokens_per_s"] > best["tokens_per_s"]:
             best = res
@@ -89,47 +125,69 @@ def _bench_path(make_batcher, cfg, params, gate, ds, *, requests: int,
     return best, streams
 
 
-def _per_shard_parity(mesh, cfg, params, gate, ds, *, requests: int,
-                      max_tokens: int, batch: int, cache_len: int) -> bool:
-    """Multi-shard hand-off check: one request wave through the router,
-    then each shard's streams replayed through a fresh single-host
-    device batcher fed the same requests in the same (FIFO) order."""
+def _router_replay_parity(mesh, cfg, params, gate, ds, *, scfg_router,
+                          scfg_ref, prompts: dict, max_tokens: int,
+                          prefill_chunk: int = 1,
+                          max_steps: int) -> bool:
+    """The ONE per-shard replay protocol: feed ``prompts`` through a
+    router on ``mesh``, then replay each shard's streams through a
+    fresh single-host device batcher (built on ``scfg_ref``) fed the
+    same requests in the same (FIFO) order.  ``scfg_ref`` == the
+    router's scfg checks hand-off parity; a *dense* ``scfg_ref`` under
+    a paged router checks paged-vs-dense bit-identity (valid on
+    one-wave workloads where the two caches' semantics coincide)."""
     from repro.serve.router import ShardedServe
 
-    scfg = ServeConfig(max_batch=batch, cache_len=cache_len)
-    router = ShardedServe(cfg, params, scfg, mesh, gate=gate, eos_token=-1,
-                          max_tokens=max_tokens, sync_every=SYNC_EVERY)
-    toks = {rid: rid % 97 + 1 for rid in range(requests)}
-    for rid in range(requests):
-        router.submit(rid, toks[rid], features=ds.X_test[rid])
-    done = router.run(max_steps=100 * max_tokens)
-    ok = len(done) + len(router.dropped) == requests
+    router = ShardedServe(cfg, params, scfg_router, mesh, gate=gate,
+                          eos_token=-1, max_tokens=max_tokens,
+                          sync_every=SYNC_EVERY,
+                          prefill_chunk=prefill_chunk)
+    for rid, p in prompts.items():
+        router.submit(rid, p, features=ds.X_test[rid])
+    done = router.run(max_steps=max_steps)
+    ok = len(done) + len(router.dropped) == len(prompts)
     for rids in router.assigned:
         ref = DeviceContinuousBatcher(
-            ServeEngine(cfg, params, scfg, gate=gate), eos_token=-1,
-            max_tokens=max_tokens, sync_every=SYNC_EVERY)
+            ServeEngine(cfg, params, scfg_ref, gate=gate), eos_token=-1,
+            max_tokens=max_tokens, sync_every=SYNC_EVERY,
+            prefill_chunk=prefill_chunk)
         for rid in rids:
-            ref.submit(rid, toks[rid], features=ds.X_test[rid])
-        ref_done = ref.run(max_steps=100 * max_tokens)
+            ref.submit(rid, prompts[rid], features=ds.X_test[rid])
+        ref_done = ref.run(max_steps=max_steps)
         ok = ok and all(done.get(r) == ref_done.get(r) for r in rids)
     return ok
 
 
-def main(quick: bool = True, smoke: bool = False, mesh_spec: str = None,
-         out: str = "BENCH_serve.json") -> dict:
-    requests = 16 if smoke else (48 if quick else 128)
-    max_tokens = 6 if smoke else 16
-    repeats = 2 if smoke else 4
-    batch, cache_len = 8, 64
+def _per_shard_parity(mesh, cfg, params, gate, ds, *, requests: int,
+                      max_tokens: int, batch: int, cache_len: int) -> bool:
+    """Multi-shard hand-off check, dense cache: each shard's streams
+    must match a single-host batcher fed the same requests."""
+    scfg = ServeConfig(max_batch=batch, cache_len=cache_len)
+    return _router_replay_parity(
+        mesh, cfg, params, gate, ds, scfg_router=scfg, scfg_ref=scfg,
+        prompts={rid: rid % 97 + 1 for rid in range(requests)},
+        max_tokens=max_tokens, max_steps=100 * max_tokens)
 
-    ds = load_dataset("unsw", n=4000)
-    gate = plant(PlanterConfig(model="rf", size="S"), ds.X_train, ds.y_train,
-                 None).mapped
-    cfg = get_smoke_config("qwen2_1_5b")
-    params = M.init_params(cfg, jax.random.PRNGKey(0))
-    kw = dict(requests=requests, max_tokens=max_tokens, repeats=repeats,
-              batch=batch, cache_len=cache_len)
 
+def _paged_vs_dense_parity(mesh, cfg, params, gate, ds, *, max_tokens: int,
+                           batch: int, cache_len: int) -> bool:
+    """Paged-cache decode must be bit-identical to the dense cache where
+    their semantics coincide: a one-wave workload (<= max_batch
+    single-token requests, every slot admitted at step 0, so per-slot
+    offsets equal the dense cache's global position) — on ``1xM`` that
+    is the whole stream, on multi-shard meshes it holds per shard."""
+    return _router_replay_parity(
+        mesh, cfg, params, gate, ds,
+        scfg_router=ServeConfig(max_batch=batch, cache_len=cache_len,
+                                page_size=PAGE_SIZE),
+        scfg_ref=ServeConfig(max_batch=batch, cache_len=cache_len),
+        prompts={rid: rid % 97 + 1 for rid in range(batch)},
+        max_tokens=max_tokens, max_steps=100 * max_tokens)
+
+
+def _bench_decode(cfg, params, gate, ds, kw, mesh_spec):
+    """Original single-token scenario (dense cache, host vs device)."""
+    max_tokens = kw["max_tokens"]
     old, streams_old = _bench_path(
         lambda c, p, s, g: ContinuousBatcher(
             ServeEngine(c, p, s, gate=g), eos_token=-1,
@@ -140,20 +198,11 @@ def main(quick: bool = True, smoke: bool = False, mesh_spec: str = None,
             ServeEngine(c, p, s, gate=g), eos_token=-1,
             max_tokens=max_tokens, sync_every=SYNC_EVERY),
         cfg, params, gate, ds, **kw)
-
-    parity = streams_old == streams_new
-    speedup = new["tokens_per_s"] / old["tokens_per_s"]
     result = {
-        "arch": cfg.name,
-        "requests": requests,
-        "max_tokens": max_tokens,
-        "batch": batch,
-        "sync_every": SYNC_EVERY,
-        "repeats": repeats,
         "old": old,
         "new": new,
-        "speedup": speedup,
-        "parity": parity,
+        "speedup": new["tokens_per_s"] / old["tokens_per_s"],
+        "parity": streams_old == streams_new,
     }
 
     if mesh_spec:
@@ -173,10 +222,97 @@ def main(quick: bool = True, smoke: bool = False, mesh_spec: str = None,
             shd_parity = streams_shd == streams_old
             parity_mode = "global"
         else:
-            shd_parity = _per_shard_parity(mesh, cfg, params, gate, ds,
-                                           requests=requests,
-                                           max_tokens=max_tokens,
-                                           batch=batch, cache_len=cache_len)
+            shd_parity = _per_shard_parity(
+                mesh, cfg, params, gate, ds, requests=kw["requests"],
+                max_tokens=max_tokens, batch=kw["batch"],
+                cache_len=kw["cache_len"])
+            parity_mode = "per-shard"
+        result["sharded"] = {
+            "mesh": mesh_spec,
+            "data": ndata,
+            "model": int(mesh.shape["model"]),
+            "parity": shd_parity,
+            "parity_mode": parity_mode,
+            "paged_vs_dense_parity": _paged_vs_dense_parity(
+                mesh, cfg, params, gate, ds, max_tokens=max_tokens,
+                batch=kw["batch"], cache_len=kw["cache_len"]),
+            **shd,
+        }
+    return result
+
+
+def _per_shard_prefill_parity(mesh, cfg, params, gate, ds, *,
+                              requests: int, max_tokens: int, batch: int,
+                              cache_len: int, pages: int,
+                              prompt_len: int) -> bool:
+    """Chunked-prefill hand-off across shards: each shard's streams
+    replayed through a fresh single-host paged device batcher fed the
+    same variable-length prompts in the same FIFO order."""
+    scfg = ServeConfig(max_batch=batch, cache_len=cache_len,
+                       page_size=PAGE_SIZE, pages=pages)
+    return _router_replay_parity(
+        mesh, cfg, params, gate, ds, scfg_router=scfg, scfg_ref=scfg,
+        prompts={rid: _prompt(rid, prompt_len) for rid in range(requests)},
+        max_tokens=max_tokens, prefill_chunk=PREFILL_CHUNK,
+        max_steps=100 * (max_tokens + prompt_len))
+
+
+def _bench_prefill(cfg, params, gate, ds, kw, mesh_spec=None):
+    """Prefill-heavy scenario: long variable-length prompts, short
+    decodes, paged cache on both paths.  The baseline seeds prompts one
+    token per launch (+ one sync); the device path chunks them."""
+    batch, cache_len = kw["batch"], kw["cache_len"]
+    max_tokens = kw["max_tokens"]
+    prompt_len = kw.pop("prompt_len")
+    scfg_probe = ServeConfig(max_batch=batch, cache_len=cache_len,
+                             page_size=PAGE_SIZE)
+    # pool sized to the workload's worst-case reservation — every slot
+    # stays live at a fraction of the dense cache's footprint
+    pages = batch * page_demand(scfg_probe, prompt_len, max_tokens)
+    pkw = dict(kw, page_size=PAGE_SIZE, pages=pages, prompt_len=prompt_len)
+    old, streams_old = _bench_path(
+        lambda c, p, s, g: ContinuousBatcher(
+            ServeEngine(c, p, s, gate=g), eos_token=-1,
+            max_tokens=max_tokens),
+        cfg, params, gate, ds, **pkw)
+    new, streams_new = _bench_path(
+        lambda c, p, s, g: DeviceContinuousBatcher(
+            ServeEngine(c, p, s, gate=g), eos_token=-1,
+            max_tokens=max_tokens, sync_every=SYNC_EVERY,
+            prefill_chunk=PREFILL_CHUNK),
+        cfg, params, gate, ds, **pkw)
+    result = {
+        "page_size": PAGE_SIZE,
+        "pages": pages,
+        "prefill_chunk": PREFILL_CHUNK,
+        "prompt_len": prompt_len,
+        "cache_tokens_dense": batch * cache_len,
+        "cache_tokens_paged": pages * PAGE_SIZE,
+        "old": old,
+        "new": new,
+        "speedup": new["tokens_per_s"] / old["tokens_per_s"],
+        "parity": streams_old == streams_new,
+    }
+    if mesh_spec:
+        from repro.launch.mesh import make_serve_mesh
+        from repro.serve.router import ShardedServe
+
+        mesh = make_serve_mesh(mesh_spec)
+        ndata = int(mesh.shape["data"])
+        shd, streams_shd = _bench_path(
+            lambda c, p, s, g: ShardedServe(
+                c, p, s, mesh, gate=g, eos_token=-1,
+                max_tokens=max_tokens, sync_every=SYNC_EVERY,
+                prefill_chunk=PREFILL_CHUNK),
+            cfg, params, gate, ds, **pkw)
+        if ndata == 1:
+            shd_parity = streams_shd == streams_new
+            parity_mode = "global"
+        else:
+            shd_parity = _per_shard_prefill_parity(
+                mesh, cfg, params, gate, ds, requests=kw["requests"],
+                max_tokens=max_tokens, batch=batch, cache_len=cache_len,
+                pages=pages, prompt_len=prompt_len)
             parity_mode = "per-shard"
         result["sharded"] = {
             "mesh": mesh_spec,
@@ -186,6 +322,42 @@ def main(quick: bool = True, smoke: bool = False, mesh_spec: str = None,
             "parity_mode": parity_mode,
             **shd,
         }
+    return result
+
+
+def main(quick: bool = True, smoke: bool = False, mesh_spec: str = None,
+         scenario: str = "all", out: str = "BENCH_serve.json") -> dict:
+    requests = 16 if smoke else (48 if quick else 128)
+    max_tokens = 6 if smoke else 16
+    repeats = 2 if smoke else 4
+    batch, cache_len = 8, 64
+    prefill_prompt_len = 24
+    prefill_max_tokens = 4
+
+    ds = load_dataset("unsw", n=4000)
+    gate = plant(PlanterConfig(model="rf", size="S"), ds.X_train, ds.y_train,
+                 None).mapped
+    cfg = get_smoke_config("qwen2_1_5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    result = {
+        "arch": cfg.name,
+        "requests": requests,
+        "max_tokens": max_tokens,
+        "batch": batch,
+        "sync_every": SYNC_EVERY,
+        "repeats": repeats,
+    }
+    if scenario in ("all", "decode"):
+        kw = dict(requests=requests, max_tokens=max_tokens, repeats=repeats,
+                  batch=batch, cache_len=cache_len)
+        result.update(_bench_decode(cfg, params, gate, ds, kw, mesh_spec))
+    if scenario in ("all", "prefill"):
+        pkw = dict(requests=requests, max_tokens=prefill_max_tokens,
+                   repeats=repeats, batch=batch, cache_len=cache_len,
+                   prompt_len=prefill_prompt_len)
+        result["prefill"] = _bench_prefill(cfg, params, gate, ds, pkw,
+                                           mesh_spec=mesh_spec)
 
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
@@ -193,31 +365,71 @@ def main(quick: bool = True, smoke: bool = False, mesh_spec: str = None,
     def ms(x):  # None when a wave completed zero requests
         return "—" if x is None else f"{x:.1f}"
 
-    emit("serve/continuous-host", old["wall_s"] * 1e6,
-         f"tok_s={old['tokens_per_s']:.0f};p50_ms={ms(old['p50_ms'])};"
-         f"p99_ms={ms(old['p99_ms'])}")
-    emit("serve/continuous-device", new["wall_s"] * 1e6,
-         f"tok_s={new['tokens_per_s']:.0f};p50_ms={ms(new['p50_ms'])};"
-         f"p99_ms={ms(new['p99_ms'])};speedup={speedup:.2f};parity={parity}")
-    if mesh_spec:
-        s = result["sharded"]
-        emit("serve/continuous-sharded", s["wall_s"] * 1e6,
-             f"mesh={mesh_spec};tok_s={s['tokens_per_s']:.0f};"
-             f"p50_ms={ms(s['p50_ms'])};p99_ms={ms(s['p99_ms'])};"
-             f"parity={s['parity']}({s['parity_mode']})")
-    assert parity, "device-resident batcher diverged from the host batcher"
-    if mesh_spec:
-        assert result["sharded"]["parity"], (
-            f"sharded serve ({mesh_spec}) diverged from the single-host "
-            f"batcher [{result['sharded']['parity_mode']} parity]")
-    if not smoke and not quick:
-        # timing threshold enforced only in --full runs; quick-mode
-        # results warn instead (same policy as check_regression: timing
-        # is noisy on shared runners, parity is the hard gate)
-        assert speedup >= 2.0, f"device path only {speedup:.2f}x"
-    elif speedup < 2.0:
-        print(f"::warning title=serve-bench timing::device path only "
-              f"{speedup:.2f}x (threshold enforced in --full runs only)")
+    def warn_or_assert(tag, speedup):
+        if not smoke and not quick:
+            # timing threshold enforced only in --full runs; quick-mode
+            # results warn instead (same policy as check_regression:
+            # timing is noisy on shared runners, parity is the hard gate)
+            assert speedup >= 2.0, f"{tag} only {speedup:.2f}x"
+        elif speedup < 2.0:
+            print(f"::warning title=serve-bench timing::{tag} only "
+                  f"{speedup:.2f}x (threshold enforced in --full runs "
+                  f"only)")
+
+    if scenario in ("all", "decode"):
+        old, new = result["old"], result["new"]
+        emit("serve/continuous-host", old["wall_s"] * 1e6,
+             f"tok_s={old['tokens_per_s']:.0f};p50_ms={ms(old['p50_ms'])};"
+             f"p99_ms={ms(old['p99_ms'])}")
+        emit("serve/continuous-device", new["wall_s"] * 1e6,
+             f"tok_s={new['tokens_per_s']:.0f};p50_ms={ms(new['p50_ms'])};"
+             f"p99_ms={ms(new['p99_ms'])};speedup={result['speedup']:.2f};"
+             f"parity={result['parity']}")
+        if mesh_spec:
+            s = result["sharded"]
+            emit("serve/continuous-sharded", s["wall_s"] * 1e6,
+                 f"mesh={mesh_spec};tok_s={s['tokens_per_s']:.0f};"
+                 f"p50_ms={ms(s['p50_ms'])};p99_ms={ms(s['p99_ms'])};"
+                 f"parity={s['parity']}({s['parity_mode']})")
+        assert result["parity"], \
+            "device-resident batcher diverged from the host batcher"
+        if mesh_spec:
+            assert result["sharded"]["parity"], (
+                f"sharded serve ({mesh_spec}) diverged from the "
+                f"single-host batcher "
+                f"[{result['sharded']['parity_mode']} parity]")
+            assert result["sharded"]["paged_vs_dense_parity"], (
+                f"paged-cache decode diverged from the dense cache on "
+                f"mesh {mesh_spec}")
+        warn_or_assert("device path", result["speedup"])
+    if scenario in ("all", "prefill"):
+        pf = result["prefill"]
+        emit("serve/prefill-token-by-token", pf["old"]["wall_s"] * 1e6,
+             f"tok_s={pf['old']['tokens_per_s']:.0f};"
+             f"p50_ms={ms(pf['old']['p50_ms'])};"
+             f"p99_ms={ms(pf['old']['p99_ms'])}")
+        emit("serve/prefill-chunked-paged", pf["new"]["wall_s"] * 1e6,
+             f"tok_s={pf['new']['tokens_per_s']:.0f};"
+             f"p50_ms={ms(pf['new']['p50_ms'])};"
+             f"p99_ms={ms(pf['new']['p99_ms'])};"
+             f"chunk={pf['prefill_chunk']};speedup={pf['speedup']:.2f};"
+             f"parity={pf['parity']};"
+             f"cache_tokens={pf['cache_tokens_paged']}"
+             f"/{pf['cache_tokens_dense']}")
+        if "sharded" in pf:
+            s = pf["sharded"]
+            emit("serve/prefill-sharded", s["wall_s"] * 1e6,
+                 f"mesh={mesh_spec};tok_s={s['tokens_per_s']:.0f};"
+                 f"parity={s['parity']}({s['parity_mode']})")
+        assert pf["parity"], (
+            "chunked paged prefill diverged from token-by-token seeding")
+        assert pf["cache_tokens_paged"] < pf["cache_tokens_dense"], (
+            "paged pool should undercut the dense cache footprint")
+        if "sharded" in pf:
+            assert pf["sharded"]["parity"], (
+                f"sharded chunked prefill ({mesh_spec}) diverged "
+                f"[{pf['sharded']['parity_mode']} parity]")
+        warn_or_assert("chunked prefill", pf["speedup"])
     return result
 
 
@@ -229,6 +441,16 @@ if __name__ == "__main__":
     ap.add_argument("--mesh", default=None,
                     help="also run the sharded serve path on this "
                          "DATAxMODEL mesh (e.g. 1x8) or 'auto'")
-    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--scenario", default="all",
+                    choices=["all", "decode", "prefill"],
+                    help="which serve scenario(s) to run")
+    ap.add_argument("--out", default=None,
+                    help="output json (default BENCH_serve.json for "
+                         "--scenario all; scenario-suffixed otherwise, "
+                         "so a partial run never clobbers the "
+                         "checked-in baseline)")
     a = ap.parse_args()
-    main(quick=not a.full, smoke=a.smoke, mesh_spec=a.mesh, out=a.out)
+    out = a.out or ("BENCH_serve.json" if a.scenario == "all"
+                    else f"BENCH_serve_{a.scenario}.json")
+    main(quick=not a.full, smoke=a.smoke, mesh_spec=a.mesh,
+         scenario=a.scenario, out=out)

@@ -436,6 +436,86 @@ def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int,
     return state
 
 
+def init_paged_kv(cfg: ArchConfig, n_pages: int, page_size: int) -> Tuple:
+    """Allocate the physical page pool for the paged KV cache.
+
+    Returns ``(k_pages, v_pages)``, each ``[n_layers, n_pages, page,
+    KV, hd]``.  Unlike the dense ``[B, cache_len]`` cache, memory scales
+    with the *pool*, not slots x max length — a block table per slot
+    maps logical positions to pages, so short requests pin only the
+    pages they reserve and freed pages recycle to the next admission.
+    Dense-family stacks only (hybrid/enc-dec decode keeps the dense
+    cache; the paged cache is bf16 — int8 KV remains a dense-path
+    feature).
+    """
+    if cfg.block_pattern or cfg.family == "encdec":
+        raise ValueError("paged KV cache supports dense attention "
+                         f"stacks only (got family={cfg.family!r})")
+    shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads,
+             cfg.head_dim_)
+    return (jnp.zeros(shape, COMPUTE_DTYPE), jnp.zeros(shape, COMPUTE_DTYPE))
+
+
+def paged_decode_step(params, kv: Tuple, block_tbl, pos, tokens, n_new,
+                      cfg: ArchConfig, *, moe_impl: str = "dense",
+                      unroll: bool = False,
+                      sample_greedy: bool = False) -> Tuple[jax.Array, Tuple]:
+    """Chunked multi-token decode/prefill through the paged KV cache.
+
+    ``tokens [B, C]`` carries up to ``C`` new tokens per slot
+    (``n_new[b]`` valid, left-aligned), each slot at its own absolute
+    offset ``pos[b]`` — this is what the dense ``decode_step`` cannot
+    do: its position is one global scalar, so prompts must enter one
+    token per launch.  Here a P-token prompt costs ``ceil(P/C)``
+    launches and every slot advances independently.
+
+    Returns logits (or greedy tokens) at each slot's *last valid*
+    chunk position — mid-prompt predictions are computed but discarded
+    by the caller, matching token-by-token seeding bit for bit.
+    ``n_new[b] = 0`` marks an idle slot: its writes drop and its output
+    row is garbage (finite), never read.
+    """
+    k_pages, v_pages = kv
+    B, C = tokens.shape
+    N_pages, page = k_pages.shape[1], k_pages.shape[2]
+    n_ps = block_tbl.shape[1]
+    positions = pos[:, None] + jnp.arange(C)[None]  # [B, C] absolute
+    valid = jnp.arange(C)[None] < n_new[:, None]
+    lp = jnp.clip(positions // page, 0, n_ps - 1)
+    page_ids = jnp.take_along_axis(block_tbl, lp, axis=1)
+    page_ids = jnp.where(valid, page_ids, N_pages)  # N = dropped write
+    page_off = positions % page
+    x = params["embed"][tokens].astype(COMPUTE_DTYPE)
+    windows = jnp.asarray(layer_windows(cfg))
+
+    def body(x, xs):
+        layer_p, ck, cv, w = xs
+        h = rms_norm(x, layer_p["ln1"], cfg.norm_eps)
+        out, ck, cv = A.paged_decode_attention_block(
+            layer_p["mixer"], h, ck, cv, block_tbl, positions, page_ids,
+            page_off, n_heads=cfg.q_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta, window=w,
+            qk_norm=cfg.qk_norm, norm_eps=cfg.norm_eps)
+        x = x + out
+        x, _ = _ffn(layer_p, cfg, x, moe_impl)
+        return x, (ck, cv)
+
+    x, (k_pages, v_pages) = jax.lax.scan(
+        body, x, (params["layers"], k_pages, v_pages, windows),
+        unroll=unroll)
+    # select each slot's last valid position BEFORE the vocab
+    # projection: the head is the dominant decode matmul and only one
+    # chunk position per slot is kept (rms_norm + einsum are
+    # per-position, so this is bit-identical to projecting all C)
+    last = jnp.clip(n_new - 1, 0, C - 1)
+    x = jnp.take_along_axis(x, last[:, None, None], axis=1)
+    logits = lm_head(params, x, cfg.norm_eps)[:, 0]
+    if sample_greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), \
+            (k_pages, v_pages)
+    return logits, (k_pages, v_pages)
+
+
 def _decode_mixer(lp, cfg: ArchConfig, kind: str, x, window, cache, pos,
                   gqa_impl: str = "repeat", kv_scales=None):
     """One decode step through one mixer; returns (x, new_cache[, scales])."""

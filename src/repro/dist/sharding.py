@@ -227,11 +227,40 @@ def cache_shardings(state, mesh, batch: int):
             mesh, cache_pspec(path, leaf, mesh, batch)), state)
 
 
+def paged_cache_pspec(leaf, mesh) -> P:
+    """PartitionSpec for a paged KV page pool ``[stack, n_pages, page,
+    KV, hd]`` (see ``model.init_paged_kv``).
+
+    Physical pages shard over ``data`` (the pool is the per-shard slot
+    memory, like the dense cache's batch dim), and the *within-page*
+    sequence dim shards over ``model`` where the page size divides it —
+    preserving the dense cache's KV-seq-over-``model`` rule at page
+    granularity.  The block table stays replicated (its page-list dim
+    is tiny control state), so a page gather is index arithmetic plus
+    whatever collective GSPMD derives for the sharded pool.
+    """
+    shape = tuple(leaf.shape)
+    if len(shape) != 5:
+        return P(*([None] * len(shape)))
+    return _validated(shape,
+                      (None, data_axis(mesh), MODEL_AXIS, None, None),
+                      mesh)
+
+
+def paged_kv_shardings(kv, mesh):
+    """NamedShardings for the ``(k_pages, v_pages)`` page pool."""
+    from jax.sharding import NamedSharding
+
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(mesh, paged_cache_pspec(leaf, mesh)), kv)
+
+
 # ------------------------------------------------------------------- serve
 # The device-resident batcher's donated pytree (serve.engine
-# DeviceContinuousBatcher): a decode-state subtree under "decode", flat
-# per-slot arrays, per-request output rings, and a scalar queue head.
-_SLOT_LEAVES = ("free", "req", "gen", "last", "hasf")
+# DeviceContinuousBatcher): a decode-state subtree under "decode" (or a
+# page pool under "pages"), flat per-slot arrays, per-request output
+# rings, and a scalar queue head.
+_SLOT_LEAVES = ("free", "req", "gen", "last", "hasf", "pos", "plen")
 _RING_LEAVES = ("out_tok", "out_len", "out_done", "out_drop")
 
 
@@ -239,22 +268,31 @@ def serve_pspec(path, leaf, mesh, batch: int) -> P:
     """PartitionSpec for one serve-state leaf.
 
     * the ``decode`` subtree follows ``cache_pspec`` (batch over data,
-      KV sequence over model);
-    * per-slot arrays (``free``/``req``/``gen``/``last``/``hasf`` and the
-      ``[B, F]`` gate features) shard their slot dim over data;
-    * output rings replicate — they are drained to host every
-      ``sync_every`` steps, and a replicated ring keeps that drain one
-      local read instead of an all-gather per round trip;
+      KV sequence over model); the paged ``pages`` pool follows
+      ``paged_cache_pspec`` (pages over data, within-page seq over
+      model);
+    * per-slot arrays (``free``/``req``/``gen``/``last``/``hasf``, the
+      paged ``pos``/``plen``, the ``[B, F]`` gate features, the
+      ``[B, P]`` prompt buffer and the ``[B, n_ps]`` block table) shard
+      their slot dim over data; the block table's page-list dim
+      replicates;
+    * output rings and the free-page mask replicate — they are drained
+      to host every ``sync_every`` steps, and a replicated ring keeps
+      that drain one local read instead of an all-gather per round
+      trip;
     * scalars (queue ``head``) replicate.
     """
     names = _path_names(path)
     if names and names[0] == "decode":
         return cache_pspec(path[1:], leaf, mesh, batch)
+    if names and names[0] == "pages":
+        return paged_cache_pspec(leaf, mesh)
     shape = tuple(leaf.shape)
     name = names[-1] if names else ""
-    if not shape or name == "head" or name in _RING_LEAVES:
+    if not shape or name == "head" or name == "pfree" \
+            or name in _RING_LEAVES:
         return P(*([None] * len(shape)))
-    if name in _SLOT_LEAVES or name == "feat":
+    if name in _SLOT_LEAVES or name in ("feat", "pbuf", "tbl"):
         return batch_pspec(mesh, shape[0], len(shape))
     return P(*([None] * len(shape)))
 

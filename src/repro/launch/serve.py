@@ -11,10 +11,17 @@
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
         --continuous --mesh 2x4 --router --requests 64 --tokens 8
+
+    # paged KV cache + chunked multi-token prefill (variable-length
+    # prompts enter the fused step prefill_chunk tokens per launch)
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+        --continuous --requests 64 --tokens 4 --prompt-len 24 \
+        --page-size 16 --prefill-chunk 8
 """
 from __future__ import annotations
 
 import argparse
+import collections
 import time
 
 import jax
@@ -50,6 +57,22 @@ def main(argv=None):
                          "jitted step; host = per-token reference)")
     ap.add_argument("--sync-every", type=int, default=16,
                     help="device batcher: steps per host round trip")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="paged KV cache: tokens per page (0 = dense "
+                         "ring cache; paging enables multi-token "
+                         "prompts + chunked prefill)")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="paged KV cache: physical page pool size "
+                         "(0 = max_batch * cache_len/page_size, the "
+                         "dense-equivalent footprint; smaller pools "
+                         "oversubscribe slots)")
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="prompt tokens consumed per fused step on the "
+                         "paged device path (1 = token-by-token)")
+    ap.add_argument("--prompt-len", type=int, default=1,
+                    help="max prompt length; prompts are drawn with "
+                         "variable length in [1, prompt-len] "
+                         "(>1 needs --page-size)")
     ap.add_argument("--mesh", default=None,
                     help="DATAxMODEL serve mesh (e.g. 1x8, 2x4) or 'auto'; "
                          "implies --continuous --router")
@@ -82,7 +105,10 @@ def main(argv=None):
         print(f"gate: {args.gate} parity={res.parity:.3f} "
               f"resources={gate.resources()} backend={backend}")
 
-    scfg = ServeConfig(max_batch=args.batch, cache_len=64)
+    if args.prompt_len > 1 and not args.page_size:
+        ap.error("--prompt-len > 1 needs --page-size (paged KV cache)")
+    scfg = ServeConfig(max_batch=args.batch, cache_len=64,
+                       page_size=args.page_size, pages=args.pages)
 
     # wrap around the test set so any --requests count is serveable
     feats = ds.X_test[np.arange(args.requests) % len(ds.X_test)]
@@ -94,30 +120,37 @@ def main(argv=None):
                               gate_backend=args.gate_backend, eos_token=-1,
                               max_tokens=args.tokens,
                               sync_every=args.sync_every,
-                              rebalance_margin=args.rebalance_margin)
+                              rebalance_margin=args.rebalance_margin,
+                              prefill_chunk=args.prefill_chunk)
             print(f"router: {cb.n_shards} shard(s) over mesh "
                   f"{dict(mesh.shape)}")
         else:
             engine = ServeEngine(cfg, params, scfg, gate=gate,
                                  gate_backend=args.gate_backend)
             if args.batcher == "device":
-                cb = DeviceContinuousBatcher(engine, eos_token=-1,
-                                             max_tokens=args.tokens,
-                                             sync_every=args.sync_every)
+                cb = DeviceContinuousBatcher(
+                    engine, eos_token=-1, max_tokens=args.tokens,
+                    sync_every=args.sync_every,
+                    prefill_chunk=args.prefill_chunk)
             else:
                 cb = ContinuousBatcher(engine, eos_token=-1,
                                        max_tokens=args.tokens)
         for rid in range(args.requests):
-            cb.submit(rid, int(rng.integers(1, cfg.vocab_size)),
+            plen = int(rng.integers(1, args.prompt_len + 1))
+            cb.submit(rid,
+                      rng.integers(1, cfg.vocab_size, plen).tolist(),
                       features=feats[rid])
         t0 = time.perf_counter()
-        done = cb.run(max_steps=100 * args.tokens)
+        # budget covers prefill too: the host loop costs one step per
+        # prompt token, so prompt-heavy waves need the longer horizon
+        done = cb.run(max_steps=100 * (args.tokens + args.prompt_len))
         dt = time.perf_counter() - t0
         n_tok = sum(len(v) for v in done.values())
         tag = "router" if args.router else args.batcher
+        reasons = collections.Counter(cb.drop_reasons.values())
         print(f"[{tag}] served {len(done)} requests "
-              f"(dropped {len(cb.dropped)}) — {n_tok} tokens in {dt:.2f}s "
-              f"({n_tok / dt:.1f} tok/s)")
+              f"(dropped {len(cb.dropped)}: {dict(reasons) or 'none'}) — "
+              f"{n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s)")
         if args.router:
             print(f"  per-shard served: "
                   f"{[len(a) for a in cb.assigned]}")

@@ -195,6 +195,73 @@ def quantize_kv_int8(t: jax.Array) -> Tuple[jax.Array, jax.Array]:
     return q.astype(jnp.int8), scale
 
 
+def paged_decode_attention_block(
+    p: Dict,
+    x: jax.Array,  # [B, C] chunk of current tokens' activations [B, C, D]
+    k_pages: jax.Array,  # [N_pages, page, KV, hd] physical page pool
+    v_pages: jax.Array,
+    block_tbl: jax.Array,  # [B, n_ps] logical page -> physical page
+    positions: jax.Array,  # [B, C] absolute position per chunk slot
+    page_ids: jax.Array,  # [B, C] physical page per new token (N = drop)
+    page_off: jax.Array,  # [B, C] within-page offset per new token
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    window,
+    qk_norm: bool,
+    norm_eps: float,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Chunked decode attention through a paged (block-table) KV cache.
+
+    The serve-path analogue of ``decode_attention_block`` for the paged
+    cache: the chunk's K/V are scattered into their physical pages
+    (``page_ids``/``page_off``, precomputed once per step by the caller
+    and shared across layers; out-of-range ids drop the write, which is
+    how padded chunk slots are masked), then every query attends over
+    the *logical* view ``k_pages[block_tbl]`` — pages gathered in
+    logical order, so cell ``i`` of the gathered axis holds absolute
+    position ``i`` exactly like the dense cache holds position
+    ``i`` before its ring wraps.  Masking reuses ``_mask_block`` on the
+    per-slot absolute positions, which makes it correct at page
+    boundaries by construction: a chunk straddling two pages masks on
+    positions, not on page geometry.  Unwritten/stale cells (recycled
+    pages) are killed by the causal term — a key cell is attended only
+    when ``k_pos <= q_pos``, and every position ``<= q_pos`` of the
+    owning slot has been written through its own table entry.
+
+    Bit-exactness contract: for a chunk of width 1 starting at the same
+    position, the gathered axis has the same length, values and mask as
+    the (unwrapped) dense cache axis, so logits match the dense path
+    bit for bit (asserted by tests/test_serve.py).
+    """
+    B, C, _ = x.shape
+    N_pages, page = k_pages.shape[0], k_pages.shape[1]
+    n_ps = block_tbl.shape[1]
+    q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim, positions,
+                           rope_theta, qk_norm, norm_eps)
+    k_pages = k_pages.at[page_ids, page_off].set(
+        k.astype(k_pages.dtype), mode="drop")
+    v_pages = v_pages.at[page_ids, page_off].set(
+        v.astype(v_pages.dtype), mode="drop")
+    # logical view: pages gathered in table order -> [B, n_ps*page, KV, hd]
+    gtbl = jnp.clip(block_tbl, 0, N_pages - 1)
+    kf = k_pages[gtbl].reshape(B, n_ps * page, *k_pages.shape[2:])
+    vf = v_pages[gtbl].reshape(B, n_ps * page, *v_pages.shape[2:])
+    kf = _repeat_kv(kf.astype(x.dtype), n_heads)
+    vf = _repeat_kv(vf.astype(x.dtype), n_heads)
+    k_pos = jnp.broadcast_to(jnp.arange(n_ps * page)[None],
+                             (B, n_ps * page))
+    mask = _mask_block(positions, k_pos, window, causal=True)  # [B, C, S]
+    s = jnp.einsum("bqhd,bshd->bhqs", q, kf) / np.sqrt(head_dim)
+    s = s.astype(jnp.float32) + mask[:, None, :, :]
+    probs = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, vf).reshape(
+        B, C, n_heads * head_dim)
+    return out @ p["wo"].astype(x.dtype), k_pages, v_pages
+
+
 def decode_attention_block(
     p: Dict,
     x: jax.Array,  # [B, 1, D] current token

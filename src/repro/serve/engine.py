@@ -19,6 +19,23 @@ queue, EOS/max-token eviction):
   round trip (the driver only drains finished sequences).  Admission is
   one batched gate launch over the whole waiting queue, and the gate's
   verdicts drive slot eviction *inside* the step.
+
+Both batchers run either decode-cache layout:
+
+* **dense** (default): one global position, ``[B, cache_len]`` ring
+  cache, single-token prompts — the seed semantics, kept bit-stable.
+* **paged** (``ServeConfig(page_size=...)``): block-table page pool with
+  per-slot position offsets; prompts are token sequences.  The host
+  batcher seeds them one token per launch (the measured baseline), the
+  device batcher consumes ``prefill_chunk`` tokens per fused step —
+  bit-identical streams, ``ceil(P/chunk)`` launches instead of P.
+  Admission reserves a request's whole worst-case page footprint
+  (``page_demand``), so live slots never stall on an empty pool and a
+  pool smaller than ``B x cache_len`` oversubscribes slots (more live
+  slots at fixed cache memory).
+
+Dropped requests record a reason in ``drop_reasons``: ``gate-reject``
+(Planter verdict) or ``queue-full`` (bounded ``max_queue``).
 """
 from __future__ import annotations
 
@@ -42,6 +59,70 @@ class ServeConfig:
     max_batch: int = 8
     cache_len: int = 256
     gate_action_drop: int = 1  # gate label that means "drop request"
+    # paged KV cache geometry: page_size > 0 switches the serve path to
+    # the block-table cache (per-slot position offsets, chunked
+    # prefill).  ``pages`` sizes the physical pool; 0 = one full
+    # cache_len worth of pages per slot (no oversubscription — the
+    # dense-equivalent footprint).  Smaller pools oversubscribe: a slot
+    # only pins ceil((prompt+max_tokens)/page_size) pages while live,
+    # so at fixed cache memory strictly more slots fit than the dense
+    # [B, cache_len] cache allows.
+    page_size: int = 0
+    pages: int = 0
+
+    def __post_init__(self):
+        if self.page_size:
+            if self.cache_len % self.page_size:
+                raise ValueError(
+                    f"cache_len {self.cache_len} must be a multiple of "
+                    f"page_size {self.page_size}")
+
+    @property
+    def paged(self) -> bool:
+        return self.page_size > 0
+
+    @property
+    def pages_per_slot(self) -> int:
+        return self.cache_len // self.page_size
+
+    @property
+    def n_pages(self) -> int:
+        return self.pages or self.max_batch * self.pages_per_slot
+
+
+def page_demand(scfg: ServeConfig, prompt_len: int, max_tokens: int) -> int:
+    """Pages a request pins while live: reservation-based admission
+    (prompt + worst-case decode), so in-flight slots can never stall on
+    an empty pool and the step needs no mid-flight allocator."""
+    return -(-(prompt_len + max_tokens) // scfg.page_size)
+
+
+def validate_prompt(scfg: ServeConfig, prompt_tokens, max_tokens: int,
+                    dense_ok: bool = False) -> list:
+    """Normalize a submit()-side prompt (bare int = length-1) and check
+    it can ever be served — the ONE validation all batchers and the
+    router share, so submit-time rejection can never drift from the
+    in-step reservation rule.  ``dense_ok`` marks callers that can loop
+    a multi-token prompt on the dense cache (the host batcher); the
+    fused device step and the router's shard batchers cannot.
+    """
+    prompt = ([int(prompt_tokens)] if np.isscalar(prompt_tokens)
+              else [int(t) for t in prompt_tokens])
+    if not prompt:
+        raise ValueError("empty prompt")
+    if scfg.paged:
+        demand = page_demand(scfg, len(prompt), max_tokens)
+        if demand > min(scfg.n_pages, scfg.pages_per_slot):
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens + {max_tokens} decode "
+                f"tokens needs {demand} pages, but only "
+                f"{min(scfg.n_pages, scfg.pages_per_slot)} fit")
+    elif len(prompt) > 1 and not dense_ok:
+        raise ValueError(
+            "multi-token prompts need the paged cache "
+            "(ServeConfig(page_size=...)); the dense cache has one "
+            "global position per step")
+    return prompt
 
 
 class ServeEngine:
@@ -98,6 +179,15 @@ class ServeEngine:
         else:
             self._fused = None
             self._fused_sample = None
+        # paged serve path: chunked multi-token steps with per-slot
+        # position offsets through the block-table cache
+        self._paged_kv = None
+        if scfg.paged:
+            self._paged_sample = jax.jit(
+                lambda p, kv, tbl, pos, t, n: M.paged_decode_step(
+                    p, kv, tbl, pos, t, n, cfg, sample_greedy=True))
+        else:
+            self._paged_sample = None
 
     @property
     def state(self):
@@ -114,6 +204,34 @@ class ServeEngine:
     @state.setter
     def state(self, value):
         self._state = value
+
+    @property
+    def paged_kv(self):
+        """Lazy physical page pool for the host-driven paged loop
+        (``ContinuousBatcher`` over a paged engine); the device batcher
+        keeps its own donated pool, same as the dense cache."""
+        if self._paged_kv is None:
+            kv = M.init_paged_kv(self.cfg, self.scfg.n_pages,
+                                 self.scfg.page_size)
+            if self.mesh is not None:
+                kv = jax.device_put(
+                    kv, SH.paged_kv_shardings(kv, self.mesh))
+            self._paged_kv = kv
+        return self._paged_kv
+
+    @paged_kv.setter
+    def paged_kv(self, value):
+        self._paged_kv = value
+
+    def step_paged(self, tokens: np.ndarray, block_tbl: np.ndarray,
+                   pos: np.ndarray, n_new: np.ndarray) -> np.ndarray:
+        """One chunked paged step (host-driven): greedy next token per
+        slot at its own position offset; the page pool stays on device."""
+        nxt, self._paged_kv = self._paged_sample(
+            self.params, self.paged_kv, jnp.asarray(block_tbl, jnp.int32),
+            jnp.asarray(pos, jnp.int32), jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(n_new, jnp.int32))
+        return nxt
 
     # ------------------------------------------------------------ admission
     def admit(self, features: np.ndarray) -> np.ndarray:
@@ -200,47 +318,99 @@ class ContinuousBatcher:
     """
 
     def __init__(self, engine: ServeEngine, eos_token: int = 0,
-                 max_tokens: int = 32):
+                 max_tokens: int = 32, max_queue: Optional[int] = None):
         self.engine = engine
         self.eos = eos_token
         self.max_tokens = max_tokens
-        B = engine.scfg.max_batch
+        self.max_queue = max_queue
+        scfg = engine.scfg
+        B = scfg.max_batch
         self.slot_free = np.ones(B, bool)
-        self.slot_tokens: list = [[] for _ in range(B)]
+        self.slot_prompt: list = [[] for _ in range(B)]
+        self.slot_ptr = np.zeros(B, np.int64)  # prompt tokens consumed
+        self.slot_gen: list = [[] for _ in range(B)]
         self.slot_req: list = [None] * B
         self.slot_feat: Optional[np.ndarray] = None  # [B, F] once known
         self.queue: collections.deque = collections.deque()
         self.done: dict = {}
         self.done_at: dict = {}  # request_id -> perf_counter at completion
         self.dropped: list = []
+        self.drop_reasons: dict = {}  # request_id -> why it was dropped
+        if scfg.paged:
+            # per-slot position offsets + block table + host-side pool
+            self.slot_pos = np.zeros(B, np.int64)
+            self.slot_tbl = np.full((B, scfg.pages_per_slot),
+                                    scfg.n_pages, np.int32)
+            self.page_free = np.ones(scfg.n_pages, bool)
 
-    def submit(self, request_id, prompt_token: int,
+    def submit(self, request_id, prompt_tokens,
                features: Optional[np.ndarray] = None):
+        """Enqueue a request.  ``prompt_tokens`` is a token sequence (a
+        bare int is accepted as a length-1 prompt); the host loop feeds
+        it one token per step — the measured token-by-token baseline the
+        chunked device path is benchmarked against."""
+        prompt = validate_prompt(self.engine.scfg, prompt_tokens,
+                                 self.max_tokens, dense_ok=True)
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            self.dropped.append(request_id)
+            self.drop_reasons[request_id] = "queue-full"
+            return False
         if features is not None:
             keep = self.engine.admit(features[None])[0]
             if not keep:
                 self.dropped.append(request_id)
+                self.drop_reasons[request_id] = "gate-reject"
                 return False
-        self.queue.append((request_id, prompt_token, features))
+        self.queue.append((request_id, prompt, features))
         return True
 
     def _fill_slots(self):
+        scfg = self.engine.scfg
         for b in np.where(self.slot_free)[0]:
             if not self.queue:
                 break
-            rid, tok, feat = self.queue.popleft()
+            rid, prompt, feat = self.queue[0]
+            if scfg.paged:
+                # reservation-based admission: the request's whole
+                # worst-case footprint must be free, so live slots never
+                # stall mid-stream; FIFO blocks (no leapfrogging) when
+                # the head doesn't fit — identical to the device step's
+                # in-fill capacity rule
+                demand = page_demand(scfg, len(prompt), self.max_tokens)
+                free_ids = np.where(self.page_free)[0]
+                if demand > len(free_ids):
+                    break
+                self.slot_tbl[b] = scfg.n_pages
+                self.slot_tbl[b, :demand] = free_ids[:demand]
+                self.page_free[free_ids[:demand]] = False
+                self.slot_pos[b] = 0
+            self.queue.popleft()
             self.slot_free[b] = False
             self.slot_req[b] = rid
-            self.slot_tokens[b] = [tok]
+            self.slot_prompt[b] = prompt
+            self.slot_ptr[b] = 0
+            self.slot_gen[b] = []
             if feat is not None:
                 if self.slot_feat is None:
                     self.slot_feat = np.zeros(
                         (len(self.slot_free), len(feat)), np.int32)
                 self.slot_feat[b] = feat
 
+    def _evict(self, b, now):
+        self.done[self.slot_req[b]] = self.slot_gen[b]
+        self.done_at[self.slot_req[b]] = now
+        self.slot_free[b] = True
+        self.slot_req[b] = None
+        if self.engine.scfg.paged:  # release the slot's pages
+            owned = self.slot_tbl[b][
+                self.slot_tbl[b] < self.engine.scfg.n_pages]
+            self.page_free[owned] = True
+            self.slot_tbl[b] = self.engine.scfg.n_pages
+
     def run(self, max_steps: int = 1000) -> dict:
         """Decode until queue + slots drain; returns {request_id: tokens}."""
         B = self.engine.scfg.max_batch
+        paged = self.engine.scfg.paged
         use_gate = (self.engine._fused is not None
                     and self.slot_feat is not None)
         for _ in range(max_steps):
@@ -249,24 +419,38 @@ class ContinuousBatcher:
                 break
             use_gate = use_gate or (self.engine._fused is not None
                                     and self.slot_feat is not None)
-            tok = np.array([
-                self.slot_tokens[b][-1] if not self.slot_free[b] else 0
-                for b in range(B)], np.int32)[:, None]
-            logits, _ = self.engine.step(
-                tok, self.slot_feat if use_gate else None)
-            nxt = np.asarray(logits.argmax(axis=-1))
+            # feed the next un-consumed prompt token, else the last
+            # generated token (one token per launch: the baseline cost
+            # of not having chunked prefill)
+            tok = np.zeros(B, np.int32)
+            for b in range(B):
+                if self.slot_free[b]:
+                    continue
+                ptr, prompt = self.slot_ptr[b], self.slot_prompt[b]
+                tok[b] = (prompt[ptr] if ptr < len(prompt)
+                          else self.slot_gen[b][-1])
+            if paged:
+                nxt = np.asarray(self.engine.step_paged(
+                    tok[:, None], self.slot_tbl, self.slot_pos,
+                    (~self.slot_free).astype(np.int32)))
+            else:
+                logits, _ = self.engine.step(
+                    tok[:, None], self.slot_feat if use_gate else None)
+                nxt = np.asarray(logits.argmax(axis=-1))
             now = time.perf_counter()
             for b in range(B):
                 if self.slot_free[b]:
                     continue
-                self.slot_tokens[b].append(int(nxt[b]))
-                seq = self.slot_tokens[b]
-                if (len(seq) - 1 >= self.max_tokens
+                if paged:
+                    self.slot_pos[b] += 1
+                self.slot_ptr[b] = min(self.slot_ptr[b] + 1,
+                                       len(self.slot_prompt[b]))
+                if self.slot_ptr[b] < len(self.slot_prompt[b]):
+                    continue  # mid-prompt prediction: discard
+                self.slot_gen[b].append(int(nxt[b]))
+                if (len(self.slot_gen[b]) >= self.max_tokens
                         or int(nxt[b]) == self.eos):
-                    self.done[self.slot_req[b]] = seq[1:]
-                    self.done_at[self.slot_req[b]] = now
-                    self.slot_free[b] = True
-                    self.slot_req[b] = None
+                    self._evict(b, now)
         return self.done
 
 
@@ -305,37 +489,67 @@ class DeviceContinuousBatcher:
 
     def __init__(self, engine: ServeEngine, eos_token: int = 0,
                  max_tokens: int = 32, sync_every: int = 8,
-                 pregate: bool = True, mesh=None):
+                 pregate: bool = True, mesh=None,
+                 prefill_chunk: int = 1, max_queue: Optional[int] = None):
         self.engine = engine
         self.eos = int(eos_token)
         self.max_tokens = int(max_tokens)
         self.sync_every = max(1, int(sync_every))
         self.pregate = pregate
+        self.prefill_chunk = max(1, int(prefill_chunk))
+        self.max_queue = max_queue
         # mesh defaults to the engine's: a placed engine serves a placed
         # batcher unless the caller explicitly overrides
         self.mesh = engine.mesh if mesh is None else mesh
         scfg = engine.scfg
         self._B = scfg.max_batch
-        self._decode = M.init_decode_state(engine.cfg, scfg.max_batch,
-                                           scfg.cache_len)
-        if self.mesh is not None:
-            self._decode = jax.device_put(
-                self._decode, SH.cache_shardings(self._decode, self.mesh,
-                                                 self._B))
+        self.paged = scfg.paged
+        if self.paged:
+            # block-table cache: the physical page pool is the only
+            # big allocation; slot state (pos/plen/tbl/pbuf/pfree)
+            # joins the donated pytree per run
+            self._pages = M.init_paged_kv(engine.cfg, scfg.n_pages,
+                                          scfg.page_size)
+            if self.mesh is not None:
+                self._pages = jax.device_put(
+                    self._pages, SH.paged_kv_shardings(self._pages,
+                                                       self.mesh))
+            self._pfree = np.ones(scfg.n_pages, bool)
+        else:
+            self._decode = M.init_decode_state(engine.cfg, scfg.max_batch,
+                                               scfg.cache_len)
+            if self.mesh is not None:
+                self._decode = jax.device_put(
+                    self._decode, SH.cache_shardings(self._decode,
+                                                     self.mesh, self._B))
         self.queue: collections.deque = collections.deque()
         self.done: dict = {}
         self.done_at: dict = {}
         self.dropped: list = []
+        self.drop_reasons: dict = {}
         # per-slot carryover from a max_steps-bounded run: rid, gen, last
-        # token, gate features, partial token ring
+        # token, gate features, partial token ring (+ prompt/pos/block
+        # table in paged mode)
         self._carry: List[Optional[dict]] = [None] * self._B
-        self._run_k: Dict[Tuple[int, int, int], Callable] = {}
+        self._run_k: Dict[Tuple, Callable] = {}
 
-    def submit(self, request_id, prompt_token: int,
+    def submit(self, request_id, prompt_tokens,
                features: Optional[np.ndarray] = None):
-        """Enqueue; admission happens batched in ``run()``."""
+        """Enqueue; admission happens batched in ``run()``.
+
+        ``prompt_tokens`` is a token sequence (bare int = length-1
+        prompt).  The paged path prefill-chunks it inside the fused
+        step; the dense path has one global position per step, so it
+        accepts single-token prompts only.
+        """
+        prompt = validate_prompt(self.engine.scfg, prompt_tokens,
+                                 self.max_tokens)
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            self.dropped.append(request_id)
+            self.drop_reasons[request_id] = "queue-full"
+            return False
         self.queue.append((
-            request_id, int(prompt_token),
+            request_id, prompt,
             None if features is None else np.asarray(features)))
         return True
 
@@ -431,6 +645,148 @@ class DeviceContinuousBatcher:
 
         return jax.jit(run_k, donate_argnums=(1,))
 
+    def _make_run_k_paged(self, n_queue: int, n_out: int, n_feat: int,
+                          p_max: int) -> Callable:
+        """The paged/chunked variant of the fused serve step.
+
+        Same schedule skeleton as the dense step (ascending-slot FIFO
+        fill, gate verdict wired into eviction, done-mask drain), plus:
+
+        * fill allocates each admitted request's whole page reservation
+          (``ceil((prompt+max_tokens)/page)`` pages, lowest free pages
+          first, slot-major) and FIFO-blocks when the pool can't cover
+          the queue head — reservation admission means a live slot can
+          never stall waiting for a page;
+        * each step advances every active slot by up to
+          ``prefill_chunk`` prompt tokens (or exactly one decode token)
+          at its *own* position offset — a P-token prompt costs
+          ``ceil(P/chunk)`` launches instead of P;
+        * a slot's next token is recorded only once its prompt is
+          consumed (mid-prompt predictions are computed and discarded,
+          matching token-by-token seeding bit for bit);
+        * eviction returns the slot's pages to the pool.
+        """
+        cfg = self.engine.cfg
+        scfg = self.engine.scfg
+        gate_fn = self.engine.gate_fn
+        drop = scfg.gate_action_drop
+        eos, max_tokens, Nq, R = self.eos, self.max_tokens, n_queue, n_out
+        C = self.prefill_chunk
+        n_ps, N = scfg.pages_per_slot, scfg.n_pages
+
+        def one_step(params, qtok, qlen, qreq, qfeat, qhasf, nq, st):
+            # --- fill + page reservation (FIFO, ascending slot index)
+            free = st["free"]
+            B = free.shape[0]
+            rank = jnp.cumsum(free.astype(jnp.int32)) - 1
+            cand = st["head"] + rank
+            idx = jnp.clip(cand, 0, Nq - 1)
+            in_q = free & (cand < nq)
+            # pages per entry — the same reservation formula submit-side
+            # validation and the host fill use (floor-div works on jnp)
+            qd = page_demand(scfg, qlen, max_tokens)
+            d = jnp.where(in_q, qd[idx], 0)
+            take = in_q & (jnp.cumsum(d) <= st["pfree"].sum())
+            need = take[:, None] & (jnp.arange(n_ps)[None] < d[:, None])
+            flat = need.reshape(-1)
+            r = jnp.clip(jnp.cumsum(flat) - 1, 0, N - 1)
+            pg = jnp.argsort(~st["pfree"])[r]  # lowest free pages first
+            tbl = jnp.where(need, pg.reshape(B, n_ps),
+                            jnp.where(take[:, None], N, st["tbl"]))
+            pfree = st["pfree"].at[
+                jnp.where(flat, pg, N)].set(False, mode="drop")
+            st = dict(
+                st,
+                req=jnp.where(take, qreq[idx], st["req"]),
+                plen=jnp.where(take, qlen[idx], st["plen"]),
+                pos=jnp.where(take, 0, st["pos"]),
+                pbuf=jnp.where(take[:, None], qtok[idx], st["pbuf"]),
+                last=jnp.where(take, 0, st["last"]),
+                feat=jnp.where(take[:, None], qfeat[idx], st["feat"]),
+                hasf=jnp.where(take, qhasf[idx], st["hasf"]),
+                gen=jnp.where(take, 0, st["gen"]),
+                free=free & ~take,
+                head=st["head"] + take.sum(),
+                tbl=tbl,
+                pfree=pfree,
+            )
+            work = (~st["free"]).any()
+
+            def decode_and_evict(st):
+                free, req, gen = st["free"], st["req"], st["gen"]
+                pos, plen = st["pos"], st["plen"]
+                active = ~free
+                rem = plen - pos
+                prefilling = active & (rem > 0)
+                c = jnp.where(
+                    active,
+                    jnp.where(prefilling, jnp.minimum(C, rem), 1), 0)
+                jj = jnp.arange(C)[None]
+                gidx = jnp.clip(pos[:, None] + jj, 0, p_max - 1)
+                ptoks = jnp.take_along_axis(st["pbuf"], gidx, axis=1)
+                chunk = jnp.where(
+                    prefilling[:, None], ptoks,
+                    jnp.where(jj == 0, st["last"][:, None], 0))
+                chunk = jnp.where(jj < c[:, None], chunk, 0)
+                nxt, pages = M.paged_decode_step(
+                    params, st["pages"], st["tbl"], pos, chunk, c, cfg,
+                    sample_greedy=True)
+                pos = pos + c
+                rec = active & (pos >= plen)  # prompt consumed: record
+                if gate_fn is not None:
+                    labels = gate_fn(st["feat"])
+                    gdrop = active & st["hasf"] & (labels == drop)
+                else:
+                    gdrop = jnp.zeros_like(free)
+                out_drop = st["out_drop"].at[
+                    jnp.where(gdrop, req, R)].set(True, mode="drop")
+                live = rec & ~gdrop
+                widx = jnp.where(live, req, R)
+                out_tok = st["out_tok"].at[
+                    widx, jnp.minimum(gen, max_tokens - 1)].set(
+                        nxt, mode="drop")
+                gen = gen + live.astype(jnp.int32)
+                fin = live & ((gen >= max_tokens) | (nxt == eos))
+                evict = gdrop | fin
+                pfree = st["pfree"].at[jnp.where(
+                    evict[:, None] & (st["tbl"] < N), st["tbl"],
+                    N)].set(True, mode="drop")
+                fidx = jnp.where(fin, req, R)
+                return dict(
+                    st,
+                    pages=pages,
+                    pos=pos,
+                    free=free | evict,
+                    gen=gen,
+                    last=jnp.where(live, nxt, st["last"]),
+                    tbl=jnp.where(evict[:, None], N, st["tbl"]),
+                    pfree=pfree,
+                    out_tok=out_tok,
+                    out_len=st["out_len"].at[fidx].set(gen, mode="drop"),
+                    out_done=st["out_done"].at[fidx].set(True, mode="drop"),
+                    out_drop=out_drop,
+                )
+
+            st = jax.lax.cond(work, decode_and_evict, lambda s: s, st)
+            return st, work
+
+        def run_k(params, st, qtok, qlen, qreq, qfeat, qhasf, nq, k):
+            def cond(carry):
+                i, _, alive = carry
+                return (i < k) & alive
+
+            def body(carry):
+                i, st, _ = carry
+                st, alive = one_step(params, qtok, qlen, qreq, qfeat,
+                                     qhasf, nq, st)
+                return i + 1, st, alive
+
+            _, st, alive = jax.lax.while_loop(
+                cond, body, (jnp.int32(0), st, jnp.bool_(True)))
+            return st, alive
+
+        return jax.jit(run_k, donate_argnums=(1,))
+
     # ----------------------------------------------------------------- run
     def run(self, max_steps: int = 1000) -> dict:
         """Decode until queue + slots drain (or ``max_steps``); returns
@@ -449,13 +805,14 @@ class DeviceContinuousBatcher:
             keep[gated] = eng.admit(
                 np.stack([pending[i][2] for i in gated]))
         req_ids: List[Any] = [c["rid"] for _, c in carry]
-        kept: List[Tuple[Any, int, Optional[np.ndarray]]] = []
-        for k, (rid, tok, feat) in enumerate(pending):
+        kept: List[Tuple[Any, list, Optional[np.ndarray]]] = []
+        for k, (rid, prompt, feat) in enumerate(pending):
             if not keep[k]:
                 self.dropped.append(rid)
+                self.drop_reasons[rid] = "gate-reject"
                 continue
             req_ids.append(rid)
-            kept.append((rid, tok, feat))
+            kept.append((rid, prompt, feat))
         if not req_ids:
             return self.done
         C, n = len(carry), len(kept)
@@ -466,12 +823,23 @@ class DeviceContinuousBatcher:
         # pow2 buckets bound jit retraces across queue sizes
         Nq = max(8, 1 << (max(1, n) - 1).bit_length())
         R = max(8, 1 << (C + n - 1).bit_length())
-        qtok = np.zeros(Nq, np.int32)
+        if self.paged:
+            longest = max([len(p) for _, p, _ in kept]
+                          + [len(c["prompt"]) for _, c in carry] + [1])
+            p_max = max(4, 1 << (longest - 1).bit_length())
+            qtok = np.zeros((Nq, p_max), np.int32)
+            qlen = np.zeros(Nq, np.int32)
+        else:
+            qtok = np.zeros(Nq, np.int32)
         qreq = np.zeros(Nq, np.int32)
         qfeat = np.zeros((Nq, n_feat), np.int32)
         qhasf = np.zeros(Nq, bool)
-        for k, (_, tok, f) in enumerate(kept):
-            qtok[k] = tok
+        for k, (_, prompt, f) in enumerate(kept):
+            if self.paged:
+                qtok[k, : len(prompt)] = prompt
+                qlen[k] = len(prompt)
+            else:
+                qtok[k] = prompt[0]
             qreq[k] = C + k  # output row: carryover rows come first
             if f is not None:
                 qfeat[k, : len(f)] = f[:n_feat]
@@ -485,6 +853,12 @@ class DeviceContinuousBatcher:
         feat = np.zeros((B, n_feat), np.int32)
         hasf = np.zeros(B, bool)
         out_tok = np.zeros((R, self.max_tokens), np.int32)
+        if self.paged:
+            scfg = eng.scfg
+            pos = np.zeros(B, np.int32)
+            plen = np.zeros(B, np.int32)
+            pbuf = np.zeros((B, p_max), np.int32)
+            tbl = np.full((B, scfg.pages_per_slot), scfg.n_pages, np.int32)
         for row, (b, c) in enumerate(carry):  # resume in-flight slots
             free[b] = False
             req[b] = row
@@ -494,8 +868,12 @@ class DeviceContinuousBatcher:
             if c["feat"] is not None:
                 feat[b, : len(c["feat"])] = c["feat"][:n_feat]
             out_tok[row, : c["gen"]] = c["toks"]
+            if self.paged:
+                pos[b] = c["pos"]
+                plen[b] = len(c["prompt"])
+                pbuf[b, : len(c["prompt"])] = c["prompt"]
+                tbl[b] = c["tbl"]
         st = {
-            "decode": self._decode,
             "free": jnp.asarray(free),
             "req": jnp.asarray(req),
             "gen": jnp.asarray(gen),
@@ -508,13 +886,28 @@ class DeviceContinuousBatcher:
             "out_done": jnp.zeros(R, bool),
             "out_drop": jnp.zeros(R, bool),
         }
-        args = (jnp.asarray(qtok), jnp.asarray(qreq), jnp.asarray(qfeat),
-                jnp.asarray(qhasf), jnp.int32(n))
+        if self.paged:
+            st.update(
+                pages=self._pages,
+                pos=jnp.asarray(pos),
+                plen=jnp.asarray(plen),
+                pbuf=jnp.asarray(pbuf),
+                tbl=jnp.asarray(tbl),
+                pfree=jnp.asarray(self._pfree),
+            )
+            args = (jnp.asarray(qtok), jnp.asarray(qlen),
+                    jnp.asarray(qreq), jnp.asarray(qfeat),
+                    jnp.asarray(qhasf), jnp.int32(n))
+        else:
+            st["decode"] = self._decode
+            args = (jnp.asarray(qtok), jnp.asarray(qreq),
+                    jnp.asarray(qfeat), jnp.asarray(qhasf), jnp.int32(n))
         if self.mesh is not None:
-            # place the donated slot pytree (decode cache per cache_pspec,
-            # slot arrays over data, rings replicated for the host drain)
-            # and the device FIFO queue; every subsequent run_k call then
-            # computes under GSPMD on the mesh
+            # place the donated slot pytree (decode cache per cache_pspec
+            # or page pool per paged_cache_pspec, slot arrays over data,
+            # rings replicated for the host drain) and the device FIFO
+            # queue; every subsequent run_k call then computes under
+            # GSPMD on the mesh
             from jax.sharding import NamedSharding
 
             st = jax.device_put(
@@ -522,10 +915,16 @@ class DeviceContinuousBatcher:
             args = tuple(
                 jax.device_put(a, NamedSharding(
                     self.mesh, SH.queue_pspec(self.mesh, Nq, a.ndim)))
-                for a in args[:4]) + args[4:]
-        key = (Nq, R, n_feat)
-        if key not in self._run_k:
-            self._run_k[key] = self._make_run_k(Nq, R, n_feat)
+                for a in args[:-1]) + args[-1:]
+        if self.paged:
+            key: Tuple = (Nq, R, n_feat, p_max)
+            if key not in self._run_k:
+                self._run_k[key] = self._make_run_k_paged(Nq, R, n_feat,
+                                                          p_max)
+        else:
+            key = (Nq, R, n_feat)
+            if key not in self._run_k:
+                self._run_k[key] = self._make_run_k(Nq, R, n_feat)
         run_k = self._run_k[key]
 
         seen = np.zeros(R, bool)
@@ -542,7 +941,11 @@ class DeviceContinuousBatcher:
             seen = done_mask
             if not bool(alive):
                 break
-        self._decode = st["decode"]
+        if self.paged:
+            self._pages = st["pages"]
+            self._pfree = np.asarray(st["pfree"])
+        else:
+            self._decode = st["decode"]
         out_tok = np.asarray(st["out_tok"])
         out_len = np.asarray(st["out_len"])
         out_drop = np.asarray(st["out_drop"])
@@ -552,6 +955,7 @@ class DeviceContinuousBatcher:
                     int(t) for t in out_tok[qi, : out_len[qi]]]
             elif out_drop[qi]:
                 self.dropped.append(req_ids[qi])
+                self.drop_reasons[req_ids[qi]] = "gate-reject"
         # carry in-flight slots + re-enqueue un-admitted entries so a
         # later run() resumes the exact schedule (host-batcher semantics)
         self._carry = [None] * B
@@ -562,6 +966,11 @@ class DeviceContinuousBatcher:
             s_last = np.asarray(st["last"])
             s_feat = np.asarray(st["feat"])
             s_hasf = np.asarray(st["hasf"])
+            if self.paged:
+                s_pos = np.asarray(st["pos"])
+                s_plen = np.asarray(st["plen"])
+                s_pbuf = np.asarray(st["pbuf"])
+                s_tbl = np.asarray(st["tbl"])
             for b in range(B):
                 if s_free[b]:
                     continue
@@ -571,7 +980,13 @@ class DeviceContinuousBatcher:
                     hasf=bool(s_hasf[b]),
                     feat=s_feat[b].copy() if s_hasf[b] else None,
                     toks=out_tok[qi, : s_gen[b]].copy())
+                if self.paged:
+                    self._carry[b].update(
+                        pos=int(s_pos[b]),
+                        prompt=[int(t)
+                                for t in s_pbuf[b, : s_plen[b]]],
+                        tbl=s_tbl[b].copy())
             head = int(np.asarray(st["head"]))
-            for rid, tok, f in reversed(kept[head:]):
-                self.queue.appendleft((rid, tok, f))
+            for rid, prompt, f in reversed(kept[head:]):
+                self.queue.appendleft((rid, prompt, f))
         return self.done

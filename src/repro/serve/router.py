@@ -43,7 +43,8 @@ import numpy as np
 
 from ..dist import sharding as SH
 from ..launch.mesh import data_submeshes
-from .engine import DeviceContinuousBatcher, ServeConfig, ServeEngine
+from .engine import (DeviceContinuousBatcher, ServeConfig, ServeEngine,
+                     validate_prompt)
 
 
 def stable_shard(request_id: Any, n_shards: int) -> int:
@@ -59,7 +60,8 @@ class ShardedServe:
     def __init__(self, cfg, params, scfg: ServeConfig, mesh, *,
                  gate=None, gate_backend: str = "jnp", eos_token: int = 0,
                  max_tokens: int = 32, sync_every: int = 8,
-                 rebalance_margin: Optional[int] = None):
+                 rebalance_margin: Optional[int] = None,
+                 prefill_chunk: int = 1, max_queue: Optional[int] = None):
         self.mesh = mesh
         self.submeshes = data_submeshes(mesh)
         self.n_shards = len(self.submeshes)
@@ -79,16 +81,21 @@ class ShardedServe:
         self.batchers = [
             DeviceContinuousBatcher(eng, eos_token=eos_token,
                                     max_tokens=max_tokens,
-                                    sync_every=sync_every, pregate=False)
+                                    sync_every=sync_every, pregate=False,
+                                    prefill_chunk=prefill_chunk,
+                                    max_queue=max_queue)
             for eng in self.engines]
         self._gate_fn = self.engines[0].gate_fn
         self._drop = scfg.gate_action_drop
+        self._scfg = scfg
+        self.max_tokens = int(max_tokens)
         self.pending: List[tuple] = []
         self.assigned: List[List[Any]] = [[] for _ in range(self.n_shards)]
         self.done: dict = {}
         self.done_at: dict = {}
         self._adm_dropped: List[Any] = []
         self.dropped: List[Any] = []
+        self.drop_reasons: dict = {}
 
     # ------------------------------------------------------------ admission
     def admit(self, features: np.ndarray) -> np.ndarray:
@@ -109,12 +116,19 @@ class ShardedServe:
         return np.asarray(self._gate_fn(x)) != self._drop
 
     # -------------------------------------------------------------- routing
-    def submit(self, request_id, prompt_token: int,
+    def submit(self, request_id, prompt_tokens,
                features: Optional[np.ndarray] = None):
         """Enqueue; admission + shard placement happen batched in
-        ``run()`` so routing sees whole-wave queue depths."""
+        ``run()`` so routing sees whole-wave queue depths.
+        ``prompt_tokens`` is a token sequence (bare int = length-1
+        prompt), threaded through to the shard's chunked prefill."""
+        # same validation the shard batchers apply, surfaced at submit
+        # instead of mid-route (where a failed request would vanish
+        # from done/dropped accounting)
+        prompt = validate_prompt(self._scfg, prompt_tokens,
+                                 self.max_tokens)
         self.pending.append((
-            request_id, int(prompt_token),
+            request_id, prompt,
             None if features is None else np.asarray(features)))
         return True
 
@@ -130,14 +144,16 @@ class ShardedServe:
             keep[gated] = self.admit(
                 np.stack([pending[i][2] for i in gated]))
         depth = self.queue_depths()
-        for k, (rid, tok, feat) in enumerate(pending):
+        for k, (rid, prompt, feat) in enumerate(pending):
             if not keep[k]:
                 self._adm_dropped.append(rid)
+                self.drop_reasons[rid] = "gate-reject"
                 continue
             s = stable_shard(rid, self.n_shards)
             if depth[s] - min(depth) > self.rebalance_margin:
                 s = int(np.argmin(depth))  # spill to the shallowest queue
-            self.batchers[s].submit(rid, tok, features=feat)
+            if not self.batchers[s].submit(rid, prompt, features=feat):
+                continue  # shard rejected (queue-full): reason merged
             self.assigned[s].append(rid)
             depth[s] += 1
 
@@ -147,6 +163,7 @@ class ShardedServe:
         for b in self.batchers:
             self.done.update(b.done)
             self.done_at.update(b.done_at)
+            self.drop_reasons.update(b.drop_reasons)
         self.dropped = self._adm_dropped + [
             rid for b in self.batchers for rid in b.dropped]
 

@@ -7,11 +7,17 @@
 # so a serve-bench break is never mistaken for a pytest failure):
 #   serve-bench-smoke    tiny CPU run of both batcher paths   (exit 41)
 #   serve-bench-sharded  sharded router parity on a 1xN mesh  (exit 42)
+#   serve-bench-prefill  chunked paged prefill parity smoke   (exit 43)
 #   pytest               the tier-1 suite                     (pytest's)
+#
+# Bench JSONs land in ${BENCH_DIR:-/tmp/bench-artifacts} so CI can
+# upload them as workflow artifacts.
 set -uo pipefail
 cd "$(dirname "$0")"
 
 export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
+BENCH_DIR="${BENCH_DIR:-/tmp/bench-artifacts}"
+mkdir -p "$BENCH_DIR"
 
 fail() { # phase-name exit-code
     echo "" >&2
@@ -20,16 +26,24 @@ fail() { # phase-name exit-code
 }
 
 echo "[test.sh] phase: serve-bench-smoke"
-PYTHONPATH=src:. python -m benchmarks.serve_bench --smoke \
-    --out /tmp/BENCH_serve_smoke.json \
+PYTHONPATH=src:. python -m benchmarks.serve_bench --smoke --scenario decode \
+    --out "$BENCH_DIR/BENCH_serve_smoke.json" \
     || fail serve-bench-smoke 41
 
 # sharded serve rot-check: route over every fake device on one data
-# shard — token streams must be bit-identical to the single-host batcher
+# shard — token streams must be bit-identical to the single-host
+# batcher, and paged decode bit-identical to the dense cache
 echo "[test.sh] phase: serve-bench-sharded"
 PYTHONPATH=src:. python -m benchmarks.serve_bench --smoke --mesh auto \
-    --out /tmp/BENCH_serve_sharded.json \
+    --scenario decode --out "$BENCH_DIR/BENCH_serve_sharded.json" \
     || fail serve-bench-sharded 42
+
+# chunked prefill rot-check: paged multi-token prefill must match
+# token-by-token seeding bit for bit (runs on every device-count leg)
+echo "[test.sh] phase: serve-bench-prefill"
+PYTHONPATH=src:. python -m benchmarks.serve_bench --smoke \
+    --scenario prefill --out "$BENCH_DIR/BENCH_serve_prefill.json" \
+    || fail serve-bench-prefill 43
 
 echo "[test.sh] phase: pytest"
 python -m pytest -x -q "$@"

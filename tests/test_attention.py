@@ -1,0 +1,129 @@
+"""Attention-level invariants the serve path leans on: int8 KV
+round-trip error bounds, blocked-mask correctness at page-boundary
+positions, and the paged gather/scatter primitives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn import attention as A
+
+PAGE = 8
+
+
+# ------------------------------------------------------------- int8 KV
+@pytest.mark.parametrize("shape", [(2, 4, 3, 16), (1, 1, 1, 64), (5, 8)])
+def test_quantize_kv_int8_round_trip_bound(shape):
+    """Dequantized values are within half a quantization step of the
+    original: |x - q*scale| <= scale/2, with scale = max|x|/127 per
+    vector (the paper's action-bits quantization, serving-side)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 3.0, shape).astype(np.float32),
+                    jnp.bfloat16)
+    q, scale = A.quantize_kv_int8(x)
+    assert q.dtype == jnp.int8 and scale.shape == (*shape[:-1], 1)
+    xf = np.asarray(x, np.float32)
+    err = np.abs(xf - np.asarray(q, np.float32) * np.asarray(scale))
+    bound = np.asarray(scale) / 2 + 1e-6
+    assert (err <= bound).all(), float((err - bound).max())
+    # the per-vector max is representable exactly up to rounding
+    assert (np.abs(np.asarray(q)).max(axis=-1) >= 126).all()
+
+
+def test_quantize_kv_int8_zero_vector_safe():
+    q, scale = A.quantize_kv_int8(jnp.zeros((3, 8), jnp.bfloat16))
+    assert (np.asarray(q) == 0).all()
+    assert np.isfinite(np.asarray(scale)).all()
+    assert (np.asarray(scale) > 0).all()  # clamped, never divides by 0
+
+
+def _naive_attention(q, k, v, q_pos, k_pos, window, causal):
+    """Reference softmax attention with an explicit position mask."""
+    hd = q.shape[-1]
+    s = np.einsum("bqhd,bshd->bhqs", np.asarray(q, np.float32),
+                  np.asarray(k, np.float32)) / np.sqrt(hd)
+    qp, kp = np.asarray(q_pos), np.asarray(k_pos)
+    diff = qp[:, :, None] - kp[:, None, :]
+    ok = np.ones_like(diff, bool)
+    if causal:
+        ok &= diff >= 0
+    if window > 0:
+        ok &= diff < window
+    s = np.where(ok[:, None], s, -1e30)
+    p = jax.nn.softmax(jnp.asarray(s), axis=-1)
+    return np.einsum("bhqs,bshd->bqhd", np.asarray(p, np.float32),
+                     np.asarray(v, np.float32))
+
+
+@pytest.mark.parametrize("q0", [PAGE - 2, PAGE - 1, PAGE, PAGE + 1,
+                                3 * PAGE - 1, 3 * PAGE])
+@pytest.mark.parametrize("window", [0, PAGE, PAGE + 3])
+def test_attend_blocked_masks_at_page_boundaries(q0, window):
+    """Causal + sliding-window masks are exact when query positions
+    straddle page-boundary multiples — the positions the paged gather
+    path hands to ``_mask_block``.  A window equal to the page size is
+    the adversarial case: the valid span exactly covers one page."""
+    rng = np.random.default_rng(q0 * 31 + window)
+    B, Sq, Sk, H, hd = 1, 3, 4 * PAGE, 2, 8
+    q = jnp.asarray(rng.normal(0, 1, (B, Sq, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, Sk, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, Sk, H, hd)), jnp.float32)
+    q_pos = jnp.asarray(np.arange(q0, q0 + Sq)[None])
+    k_pos = jnp.asarray(np.arange(Sk)[None])
+    got = A.attend_blocked(q, k, v, q_pos, k_pos, jnp.int32(window),
+                           causal=True, q_block=2)
+    want = _naive_attention(q, k, v, q_pos, k_pos, window,
+                            causal=True).reshape(B, Sq, H * hd)
+    np.testing.assert_allclose(np.asarray(got), want, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [0, PAGE])
+def test_paged_attention_masks_at_page_boundaries(window):
+    """The paged variant agrees with the naive reference when a chunk
+    straddles a page boundary, and never reads cells beyond the chunk's
+    own positions (stale page contents are masked out)."""
+    rng = np.random.default_rng(7)
+    B, H, hd, n_ps = 2, 2, 8, 3
+    D = H * hd
+    N_pages = B * n_ps
+    p = A.init_attention(jax.random.PRNGKey(0), D, H, H, hd)
+    k_pages = jnp.asarray(rng.normal(0, 1, (N_pages, PAGE, H, hd)),
+                          jnp.float32)  # stale garbage everywhere
+    v_pages = jnp.asarray(rng.normal(0, 1, (N_pages, PAGE, H, hd)),
+                          jnp.float32)
+    tbl = jnp.asarray(np.arange(N_pages).reshape(B, n_ps)[:, ::-1]
+                      .copy())  # non-contiguous logical->physical map
+    x_all = jnp.asarray(rng.normal(0, 1, (B, 2 * PAGE, D)), jnp.float32)
+
+    def step(k_pages, v_pages, x, pos, width):
+        positions = pos[:, None] + jnp.arange(width)[None]
+        lp = positions // PAGE
+        page_ids = jnp.take_along_axis(tbl, jnp.clip(lp, 0, n_ps - 1),
+                                       axis=1)
+        return A.paged_decode_attention_block(
+            p, x, k_pages, v_pages, tbl, positions, page_ids,
+            positions % PAGE, n_heads=H, n_kv_heads=H, head_dim=hd,
+            rope_theta=0.0, window=jnp.int32(window), qk_norm=False,
+            norm_eps=1e-6)
+
+    # token-by-token over 2 pages
+    kp1, vp1 = k_pages, v_pages
+    outs = []
+    for i in range(2 * PAGE):
+        o, kp1, vp1 = step(kp1, vp1, x_all[:, i: i + 1],
+                           jnp.full((B,), i, jnp.int32), 1)
+        outs.append(np.asarray(o))
+    # chunks of 6 (straddles the boundary at PAGE=8: chunk [6..11])
+    kp2, vp2 = k_pages, v_pages
+    outs2 = []
+    for i in range(0, 2 * PAGE, 6):
+        w = min(6, 2 * PAGE - i)
+        o, kp2, vp2 = step(kp2, vp2, x_all[:, i: i + w],
+                           jnp.full((B,), i, jnp.int32), w)
+        outs2.append(np.asarray(o))
+    got1 = np.concatenate(outs, axis=1)
+    got2 = np.concatenate(outs2, axis=1)
+    np.testing.assert_allclose(got1, got2, atol=2e-5)
+    # written cells land in the mapped physical pages, bitwise
+    np.testing.assert_array_equal(
+        np.asarray(kp1), np.asarray(kp2))

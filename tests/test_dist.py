@@ -159,6 +159,50 @@ def test_serve_pspec_rules():
     assert SH.queue_pspec(mesh, 9, 2) == P(None, None)
 
 
+def test_paged_cache_pspec_rules():
+    """Paged page pools [stack, n_pages, page, KV, hd]: pages shard over
+    data, the within-page sequence over model where it divides, and
+    non-dividing dims degrade to replication (small-mesh safe)."""
+    mesh = _fake_mesh(data=8, model=16)
+    leaf = jax.ShapeDtypeStruct((4, 64, 32, 2, 64), jnp.bfloat16)
+    assert SH.paged_cache_pspec(leaf, mesh) == P(
+        None, "data", "model", None, None)
+    # page size not dividing model -> replicated page dim; pool not
+    # dividing data -> replicated pages
+    leaf = jax.ShapeDtypeStruct((4, 63, 20, 2, 64), jnp.bfloat16)
+    assert SH.paged_cache_pspec(leaf, mesh) == P(
+        None, None, None, None, None)
+    # non-pool leaves (defensive): replicate
+    leaf = jax.ShapeDtypeStruct((64, 32), jnp.bfloat16)
+    assert SH.paged_cache_pspec(leaf, mesh) == P(None, None)
+
+
+def test_serve_pspec_paged_leaves():
+    """The paged batcher's extra donated leaves: per-slot offsets,
+    prompt buffers and block tables shard their slot dim over data
+    (page-list dim replicated); the free-page mask replicates; the
+    page pool follows paged_cache_pspec."""
+    mesh = _fake_mesh(data=8, model=16)
+    B = 16
+    st = {
+        "pages": (jax.ShapeDtypeStruct((4, 64, 32, 2, 64), jnp.bfloat16),
+                  jax.ShapeDtypeStruct((4, 64, 32, 2, 64), jnp.bfloat16)),
+        "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "plen": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "pbuf": jax.ShapeDtypeStruct((B, 32), jnp.int32),
+        "tbl": jax.ShapeDtypeStruct((B, 4), jnp.int32),
+        "pfree": jax.ShapeDtypeStruct((64,), jnp.bool_),
+    }
+    specs = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: SH.serve_pspec(path, leaf, mesh, B), st)
+    assert specs["pages"][0] == P(None, "data", "model", None, None)
+    assert specs["pos"] == P("data")
+    assert specs["plen"] == P("data")
+    assert specs["pbuf"] == P("data", None)
+    assert specs["tbl"] == P("data", None)
+    assert specs["pfree"] == P(None)
+
+
 def test_compression_lossless_in_the_limit():
     """Property: with *varying* per-step gradients, the accumulated
     dequantized gradient tracks the true gradient sum up to a single

@@ -203,3 +203,205 @@ def test_device_batcher_multi_wave_reuses_cache(engine):
     assert set(first).issubset(both)
     n_admitted = sum(1 for k in both) + len(dev.dropped)
     assert n_admitted == 10
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache + chunked multi-token prefill
+# ---------------------------------------------------------------------------
+
+
+def _paged_engine(engine, batch=4, cache_len=32, page_size=8, pages=0):
+    eng, res = engine
+    return ServeEngine(
+        eng.cfg, eng.params,
+        ServeConfig(max_batch=batch, cache_len=cache_len,
+                    page_size=page_size, pages=pages),
+        gate=res.mapped)
+
+
+def _prompts(n=10, seed=0, max_len=8):
+    rng = np.random.default_rng(seed)
+    return [[int(t) for t in rng.integers(1, 97, rng.integers(1, max_len))]
+            for _ in range(n)]
+
+
+def _run_prompt_workload(cb, prompts, max_steps=600):
+    for rid, prompt in enumerate(prompts):
+        cb.submit(rid, prompt, features=DS.X_test[rid])
+    return cb.run(max_steps=max_steps)
+
+
+def test_paged_decode_bit_identical_to_dense(engine):
+    """Where the two caches' semantics coincide (one wave, every slot
+    admitted at step 0, single-token prompts), paged decode must be
+    bit-identical to the dense ring cache — the acceptance property the
+    serve bench asserts on meshes."""
+    dense = DeviceContinuousBatcher(_fresh_engine(engine), eos_token=-1,
+                                    max_tokens=5, sync_every=3)
+    paged = DeviceContinuousBatcher(_paged_engine(engine), eos_token=-1,
+                                    max_tokens=5, sync_every=3)
+    for rid in range(4):  # <= max_batch: no slot reuse
+        dense.submit(rid, rid + 7, features=DS.X_test[rid])
+        paged.submit(rid, rid + 7, features=DS.X_test[rid])
+    assert dense.run(max_steps=100) == paged.run(max_steps=100)
+
+
+def test_chunked_prefill_matches_token_by_token(engine):
+    """Multi-token prompts through the chunked fused step produce the
+    exact streams of token-by-token seeding — both against the host
+    paged loop (one launch + one sync per token) and across chunk
+    widths, through multiple waves of slot reuse."""
+    prompts = _prompts()
+    host = ContinuousBatcher(_paged_engine(engine), eos_token=-1,
+                             max_tokens=4)
+    done_h = _run_prompt_workload(host, prompts)
+    for chunk in (1, 3, 8):
+        dev = DeviceContinuousBatcher(_paged_engine(engine), eos_token=-1,
+                                      max_tokens=4, sync_every=3,
+                                      prefill_chunk=chunk)
+        done_d = _run_prompt_workload(dev, prompts)
+        assert done_d == done_h, f"prefill_chunk={chunk} diverged"
+        assert dev.dropped == host.dropped
+    assert len(done_h) > 0 and any(len(p) > 4 for p in prompts)
+
+
+def test_paged_eos_eviction_frees_pages(engine):
+    """EOS mid-stream evicts the slot and returns its pages; the pool
+    ends the run fully free."""
+    prompts = _prompts(n=8, max_len=6)
+    probe = DeviceContinuousBatcher(_paged_engine(engine), eos_token=-1,
+                                    max_tokens=6, prefill_chunk=4)
+    done_p = _run_prompt_workload(probe, prompts)
+    eos = next(int(v[1]) for v in done_p.values() if len(v) > 1)
+    host = ContinuousBatcher(_paged_engine(engine), eos_token=eos,
+                             max_tokens=6)
+    dev = DeviceContinuousBatcher(_paged_engine(engine), eos_token=eos,
+                                  max_tokens=6, sync_every=4,
+                                  prefill_chunk=4)
+    done_h = _run_prompt_workload(host, prompts)
+    done_d = _run_prompt_workload(dev, prompts)
+    assert done_h == done_d
+    assert any(len(v) < 6 for v in done_d.values())  # eos actually fired
+    assert dev._pfree.all() and host.page_free.all()
+
+
+def test_paged_max_steps_resumes(engine):
+    """Bounded runs carry in-flight paged slots (pos, prompt, block
+    table) and un-admitted queue entries; repeated 3-step runs
+    reproduce the single-run streams exactly."""
+    prompts = _prompts()
+    ref = DeviceContinuousBatcher(_paged_engine(engine), eos_token=-1,
+                                  max_tokens=4, sync_every=3,
+                                  prefill_chunk=3)
+    done_ref = _run_prompt_workload(ref, prompts)
+    dev = DeviceContinuousBatcher(_paged_engine(engine), eos_token=-1,
+                                  max_tokens=4, sync_every=2,
+                                  prefill_chunk=3)
+    for rid, prompt in enumerate(prompts):
+        dev.submit(rid, prompt, features=DS.X_test[rid])
+    for _ in range(200):
+        before = len(dev.done)
+        dev.run(max_steps=3)
+        if len(dev.done) == before and not dev.queue \
+                and all(c is None for c in dev._carry):
+            break
+    assert dev.done == done_ref
+    assert dev.dropped == ref.dropped
+
+
+def test_paged_pool_oversubscription_fifo(engine):
+    """A pool smaller than slots x demand admits FIFO-in-order as pages
+    free up: reservation admission means nobody stalls mid-stream, and
+    streams still match the host loop run on the same tight pool."""
+    # demand per request: ceil((plen + max_tokens)/page) <= 2 pages;
+    # pool of 4 pages => at most 2 concurrent slots despite 4 slots
+    prompts = _prompts(n=6, max_len=8)
+    host = ContinuousBatcher(_paged_engine(engine, pages=4), eos_token=-1,
+                             max_tokens=4)
+    dev = DeviceContinuousBatcher(_paged_engine(engine, pages=4),
+                                  eos_token=-1, max_tokens=4,
+                                  sync_every=3, prefill_chunk=4)
+    done_h = _run_prompt_workload(host, prompts)
+    done_d = _run_prompt_workload(dev, prompts)
+    assert done_h == done_d
+    admitted = [r for r in range(6) if r not in dev.dropped]
+    assert sorted(done_d) == sorted(admitted)  # tight pool loses nothing
+
+
+def test_paged_more_live_slots_at_fixed_memory(engine):
+    """The tentpole memory claim: at this workload's footprint the paged
+    pool holds every slot live with strictly less cache memory than the
+    dense [B, cache_len] layout (equivalently: strictly more slots fit
+    at fixed cache memory)."""
+    from repro.serve.engine import page_demand
+    scfg = ServeConfig(max_batch=4, cache_len=32, page_size=8)
+    demand = page_demand(scfg, 8, 4)  # 8-token prompts + 4 decode tokens
+    pool = scfg.max_batch * demand
+    paged_tokens = pool * scfg.page_size
+    dense_tokens = scfg.max_batch * scfg.cache_len
+    assert paged_tokens < dense_tokens
+    dev = DeviceContinuousBatcher(
+        _paged_engine(engine, pages=pool), eos_token=-1, max_tokens=4,
+        prefill_chunk=4)
+    prompts = [[int(t) for t in np.arange(8) + rid + 1] for rid in range(4)]
+    done = _run_prompt_workload(dev, prompts)
+    admitted = [r for r in range(4) if r not in dev.dropped]
+    assert sorted(done) == sorted(admitted)
+    assert all(len(done[r]) == 4 for r in admitted)
+
+
+def test_paged_in_step_gate_eviction(engine):
+    """pregate=False on the paged path: the fused gate's verdict evicts
+    dropped requests before any token is recorded, and their pages
+    return to the pool."""
+    eng = _paged_engine(engine)
+    dev = DeviceContinuousBatcher(eng, eos_token=-1, max_tokens=4,
+                                  pregate=False, sync_every=4,
+                                  prefill_chunk=4)
+    _run_prompt_workload(dev, _prompts())
+    keep = eng.admit(DS.X_test[:10])
+    assert sorted(dev.dropped) == sorted(np.where(~keep)[0])
+    assert not any(rid in dev.done for rid in dev.dropped)
+    assert sorted(dev.done) == sorted(np.where(keep)[0])
+    assert dev._pfree.all()
+
+
+def test_drop_reasons_split(engine):
+    """Per-request drop reasons: queue-full (bounded queue at submit)
+    vs gate-reject (Planter verdict), asserted as an exact split."""
+    eng = _paged_engine(engine)
+    keep = eng.admit(DS.X_test[:6])
+    dev = DeviceContinuousBatcher(eng, eos_token=-1, max_tokens=3,
+                                  prefill_chunk=4, max_queue=6)
+    prompts = _prompts(n=10, max_len=6)
+    for rid in range(10):
+        dev.submit(rid, prompts[rid], features=DS.X_test[rid])
+    dev.run(max_steps=300)
+    expect = {rid: "queue-full" for rid in range(6, 10)}
+    expect.update({rid: "gate-reject"
+                   for rid in range(6) if not keep[rid]})
+    assert dev.drop_reasons == expect
+    assert sorted(dev.dropped) == sorted(expect)
+    # both reasons actually present in this workload
+    assert set(expect.values()) == {"queue-full", "gate-reject"}
+
+
+def test_dense_device_rejects_multi_token_prompts(engine):
+    dev = DeviceContinuousBatcher(_fresh_engine(engine), eos_token=-1)
+    with pytest.raises(ValueError, match="paged"):
+        dev.submit(0, [1, 2, 3])
+
+
+def test_dense_host_batcher_loops_prompt(engine):
+    """Satellite: the dense host baseline accepts prompt sequences and
+    loops them one token per step (global-position semantics), emitting
+    exactly max_tokens generated tokens."""
+    host = ContinuousBatcher(_fresh_engine(engine), eos_token=-1,
+                             max_tokens=3)
+    host.submit(0, [5, 9, 13], features=DS.X_test[0])
+    host.submit(1, 7, features=DS.X_test[1])  # bare int still accepted
+    done = host.run(max_steps=100)
+    admitted = [r for r in (0, 1) if r not in host.dropped]
+    assert sorted(done) == sorted(admitted)
+    for r in admitted:
+        assert len(done[r]) == 3
