@@ -51,6 +51,17 @@ _SCHEMA = [
     (("prefill", "parity"), bool, True),
     (("prefill", "cache_tokens_dense"), int, True),
     (("prefill", "cache_tokens_paged"), int, True),
+    (("shared_prefix",), dict, True),
+    (("shared_prefix", "parity"), bool, True),
+    (("shared_prefix", "int8_parity"), bool, True),
+    (("shared_prefix", "sharing_gain"), _NUM, True),
+    (("shared_prefix", "slot_gain"), _NUM, True),
+    (("shared_prefix", "unshared"), dict, True),
+    (("shared_prefix", "shared"), dict, True),
+    (("shared_prefix", "int8_shared"), dict, True),
+    (("shared_prefix", "slots_fp_unshared"), int, True),
+    (("shared_prefix", "slots_int8_shared"), int, True),
+    (("shared_prefix", "int8_live_slots"), int, True),
     (("sharded",), dict, False),
     (("sharded", "parity"), bool, False),
     (("sharded", "paged_vs_dense_parity"), bool, False),
@@ -144,6 +155,36 @@ def check(new: dict, base: dict, timing_tol: float = 0.5) -> int:
                 f"chunked prefill slower than token-by-token "
                 f"({pf_speedup:.2f}x)")
 
+    sp = new.get("shared_prefix", {})
+    if isinstance(sp, dict) and sp:
+        # shared-prefix: parity and the (deterministic) memory gains are
+        # hard gates — neither depends on runner timing
+        if not sp.get("parity"):
+            failures.append("prefix sharing lost bit-exact fp parity "
+                            "with the unshared paged pool")
+        if not sp.get("int8_parity"):
+            failures.append("prefix sharing lost bit-exact parity on "
+                            "the int8 paged pool")
+        if sp.get("sharing_gain", 0) < 2.0:
+            failures.append(
+                f"shared-prefix pool packs only "
+                f"{sp.get('sharing_gain', 0):.2f}x live prefix tokens "
+                f"per page (acceptance: >= 2x)")
+        if sp.get("slot_gain", 0) < 2.0:
+            failures.append(
+                f"int8+shared pool admits only "
+                f"{sp.get('slot_gain', 0):.2f}x the fp unshared slots "
+                f"at fixed pool bytes (acceptance: >= 2x)")
+        if sp.get("int8_live_slots", 0) < sp.get("slots_int8_shared", 0):
+            failures.append(
+                "int8+shared live run held fewer concurrent slots than "
+                "the fixed-byte computation promises")
+        for path_name in ("unshared", "shared", "int8_shared"):
+            if sp.get(path_name, {}).get("completed", 0) <= 0:
+                failures.append(
+                    f"shared-prefix {path_name} path completed zero "
+                    f"requests")
+
     base_tps = base.get("new", {}).get("tokens_per_s")
     new_tps = new.get("new", {}).get("tokens_per_s")
     same_scale = new.get("requests") == base.get("requests")
@@ -174,6 +215,8 @@ def check(new: dict, base: dict, timing_tol: float = 0.5) -> int:
     print(f"bench gate ok: parity={new.get('parity')}"
           + (f", sharded={sharded.get('parity')}" if sharded else "")
           + f", prefill={new.get('prefill', {}).get('parity')}"
+          + f", shared-prefix={sp.get('parity')}/"
+          + f"int8={sp.get('int8_parity')}"
           + f", {len(warnings)} timing warning(s)")
     return 0
 

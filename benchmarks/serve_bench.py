@@ -1,6 +1,6 @@
 """Continuous-batching serve benchmark: host-driven vs device-resident.
 
-Two scenarios over the same ``repro.serve`` engines:
+Three scenarios over the same ``repro.serve`` engines:
 
 * **decode** (the original): single-token prompts; the seed
   ``ContinuousBatcher`` (one jit dispatch + one logits sync per token)
@@ -15,6 +15,12 @@ Two scenarios over the same ``repro.serve`` engines:
   pool is sized to the workload's reservation demand — strictly less
   cache memory than the dense ``[B, cache_len]`` layout needs for the
   same live slots.
+* **shared-prefix**: every request carries a common prompt prefix;
+  the refcounted pool with ``share_prefix=True`` maps the prefix to
+  shared read-only pages (>= 2x live prefix tokens per pool page,
+  bit-exact fp AND int8 parity vs the unshared pool), and the int8
+  pool admits >= 2x the concurrent slots at fixed pool bytes (live-
+  checked by a host batcher run).
 
 ``BENCH_serve.json`` gets tokens/s + p50/p99 per-request latency for
 every path, per-request drop reasons (queue-full vs gate-reject), and
@@ -69,34 +75,61 @@ def _prompt(i: int, max_len: int):
     return [(i * 7 + j) % 97 + 1 for j in range(plen)]
 
 
+def _reset_pool_stats(cb):
+    """Zero the sharing counters after the warm wave (so the reported
+    ratio reflects steady-state serving, trie warm)."""
+    pools = ([cb.pool] if hasattr(cb, "pool")
+             else [b.pool for b in getattr(cb, "batchers", [])
+                   if hasattr(b, "pool")])
+    for p in pools:
+        p.reset_stats()
+
+
+def _pool_ratio(cb) -> float:
+    """Live prefix tokens per pool page for any batcher shape."""
+    if hasattr(cb, "pool"):
+        return cb.pool.prefix_tokens_per_page()
+    if hasattr(cb, "prefix_tokens_per_page"):
+        return cb.prefix_tokens_per_page()
+    return 1.0
+
+
 def _bench_path(make_batcher, cfg, params, gate, ds, *, requests: int,
                 max_tokens: int, repeats: int, batch: int, cache_len: int,
-                page_size: int = 0, pages: int = 0, prompt_len: int = 1):
+                page_size: int = 0, pages: int = 0, prompt_len: int = 1,
+                share_prefix: bool = False, kv_int8: bool = False,
+                prompt_fn=None):
     """Run one batcher over the request stream; best-of-``repeats``.
 
     ``make_batcher(cfg, params, scfg, gate)`` builds the path under test
     (host batcher, device batcher, or the sharded router — they share
     the submit/run/done interface).  A warmup run with the same queue
     size triggers every compile up front (the device batcher buckets its
-    jit by queue size), so the timed repeats measure steady-state
-    serving only.
+    jit by queue size) and, when prefix sharing is on, populates the
+    prefix trie — so the timed repeats measure steady-state serving
+    only.  ``prompt_fn(i)`` overrides the default workload prompts.
     """
     scfg = ServeConfig(max_batch=batch, cache_len=cache_len,
-                       page_size=page_size, pages=pages)
+                       page_size=page_size, pages=pages,
+                       share_prefix=share_prefix, kv_int8=kv_int8)
     cb = make_batcher(cfg, params, scfg, gate)
 
     def submit_wave(tag):
         rids = []
         for i in range(requests):
             rid = (tag, i)
-            tok = (_prompt(i, prompt_len) if prompt_len > 1
-                   else int(i % 97 + 1))
+            if prompt_fn is not None:
+                tok = prompt_fn(i)
+            else:
+                tok = (_prompt(i, prompt_len) if prompt_len > 1
+                       else int(i % 97 + 1))
             cb.submit(rid, tok, features=ds.X_test[i])
             rids.append(rid)
         return rids
 
     submit_wave("warm")
     cb.run(max_steps=100 * (max_tokens + prompt_len))
+    _reset_pool_stats(cb)
 
     best = None
     for rep in range(repeats):
@@ -120,6 +153,8 @@ def _bench_path(make_batcher, cfg, params, gate, ds, *, requests: int,
         }
         if best is None or res["tokens_per_s"] > best["tokens_per_s"]:
             best = res
+    if page_size:
+        best["prefix_tokens_per_page"] = _pool_ratio(cb)
     streams = {rid: cb.done[rid] for rid in cb.done
                if not isinstance(rid[0], str)}
     return best, streams
@@ -325,6 +360,105 @@ def _bench_prefill(cfg, params, gate, ds, kw, mesh_spec=None):
     return result
 
 
+def _bench_shared_prefix(cfg, params, gate, ds, kw):
+    """Shared-prefix scenario: every request carries the same
+    ``prefix_len``-token prompt prefix plus a short unique tail.
+
+    Four device paths over the same workload: fp unshared (baseline),
+    fp shared (must be bit-identical — shared pages hold exactly what
+    each sharer would have written), int8 unshared and int8 shared
+    (bit-identical to each other: quantization is deterministic).  The
+    acceptance metrics:
+
+    * ``sharing_gain`` — live full-page prompt tokens per distinct pool
+      page in the shared run (unshared is 1.0 by construction): >= 2x
+      whenever >= 2 requests share a prefix page;
+    * ``slot_gain`` — concurrent slots admitted at a FIXED pool byte
+      budget by the int8+shared pool vs the fp unshared pool (page
+      bytes measured from the real pool allocations, live-checked by a
+      host batcher run that actually holds ``slots_int8`` slots).
+    """
+    batch, cache_len = kw["batch"], kw["cache_len"]
+    max_tokens, requests = kw["max_tokens"], kw["requests"]
+    page, prefix_len, tail_max = 8, 16, 6
+    prefix = [(7 * j) % 89 + 1 for j in range(prefix_len)]
+
+    def prompt_fn(i):
+        tail = 1 + (i * 3) % tail_max
+        return prefix + [(i * 11 + j) % 89 + 2 for j in range(tail)]
+
+    scfg_probe = ServeConfig(max_batch=batch, cache_len=cache_len,
+                             page_size=page)
+    demand = page_demand(scfg_probe, prefix_len + tail_max, max_tokens)
+    prefix_pages = prefix_len // page
+    # pool: one wave of reservations + headroom for the prefix cache
+    pages = batch * demand + 2 * prefix_pages + 4
+    pkw = dict(kw, page_size=page, pages=pages, prompt_len=prefix_len
+               + tail_max, prompt_fn=prompt_fn)
+
+    def dev(share, int8):
+        return _bench_path(
+            lambda c, p, s, g: DeviceContinuousBatcher(
+                ServeEngine(c, p, s, gate=g), eos_token=-1,
+                max_tokens=max_tokens, sync_every=SYNC_EVERY,
+                prefill_chunk=PREFILL_CHUNK),
+            cfg, params, gate, ds, share_prefix=share, kv_int8=int8,
+            **pkw)
+
+    unshared, streams_un = dev(False, False)
+    shared, streams_sh = dev(True, False)
+    i8_un, streams_i8u = dev(False, True)
+    i8_sh, streams_i8s = dev(True, True)
+    sharing_gain = shared["prefix_tokens_per_page"]
+
+    # fixed-byte slot math: page bytes measured from real allocations
+    fp_pb = sum(int(x.nbytes) for x in M.init_paged_kv(cfg, 1, page))
+    i8_pb = sum(int(x.nbytes)
+                for x in M.init_paged_kv(cfg, 1, page, kv_dtype="int8"))
+    budget = pages * fp_pb
+    pages_i8 = budget // i8_pb
+    slots_fp = pages // demand
+    own_demand = demand - prefix_pages  # prefix shared away
+    slots_i8 = (pages_i8 - prefix_pages) // own_demand
+    # live check: an int8+shared pool of pages_i8 pages really holds
+    # slots_i8 concurrent slots (host batcher tracks peak occupancy)
+    live_scfg = ServeConfig(max_batch=int(slots_i8),
+                            cache_len=cache_len, page_size=page,
+                            pages=int(pages_i8), share_prefix=True,
+                            kv_int8=True)
+    live = ContinuousBatcher(ServeEngine(cfg, params, live_scfg),
+                             eos_token=-1, max_tokens=max_tokens)
+    live.submit("seed", prompt_fn(0))  # registers the prefix
+    live.run(max_steps=100 * (max_tokens + prefix_len + tail_max))
+    for i in range(int(slots_i8)):
+        live.submit(i, prompt_fn(i))
+    live_done = live.run(max_steps=100 * (max_tokens + prefix_len
+                                          + tail_max))
+
+    return {
+        "page_size": page,
+        "prefix_len": prefix_len,
+        "pages": pages,
+        "requests": requests,
+        "unshared": unshared,
+        "shared": shared,
+        "int8_unshared": i8_un,
+        "int8_shared": i8_sh,
+        "speedup": shared["tokens_per_s"] / unshared["tokens_per_s"],
+        "parity": streams_sh == streams_un,
+        "int8_parity": streams_i8s == streams_i8u,
+        "sharing_gain": sharing_gain,
+        "pool_page_bytes_fp": fp_pb,
+        "pool_page_bytes_int8": i8_pb,
+        "pool_bytes_budget": budget,
+        "slots_fp_unshared": int(slots_fp),
+        "slots_int8_shared": int(slots_i8),
+        "slot_gain": slots_i8 / slots_fp,
+        "int8_live_slots": int(live.max_live),
+        "int8_live_completed": len(live_done) - 1,  # minus the seed
+    }
+
+
 def main(quick: bool = True, smoke: bool = False, mesh_spec: str = None,
          scenario: str = "all", out: str = "BENCH_serve.json") -> dict:
     requests = 16 if smoke else (48 if quick else 128)
@@ -358,6 +492,11 @@ def main(quick: bool = True, smoke: bool = False, mesh_spec: str = None,
                    prompt_len=prefill_prompt_len)
         result["prefill"] = _bench_prefill(cfg, params, gate, ds, pkw,
                                            mesh_spec=mesh_spec)
+    if scenario in ("all", "shared-prefix"):
+        skw = dict(requests=requests, max_tokens=prefill_max_tokens,
+                   repeats=repeats, batch=batch, cache_len=cache_len)
+        result["shared_prefix"] = _bench_shared_prefix(cfg, params, gate,
+                                                       ds, skw)
 
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
@@ -430,6 +569,31 @@ def main(quick: bool = True, smoke: bool = False, mesh_spec: str = None,
                 f"sharded chunked prefill ({mesh_spec}) diverged "
                 f"[{pf['sharded']['parity_mode']} parity]")
         warn_or_assert("chunked prefill", pf["speedup"])
+    if scenario in ("all", "shared-prefix"):
+        sp = result["shared_prefix"]
+        emit("serve/shared-prefix-unshared", sp["unshared"]["wall_s"] * 1e6,
+             f"tok_s={sp['unshared']['tokens_per_s']:.0f}")
+        emit("serve/shared-prefix-shared", sp["shared"]["wall_s"] * 1e6,
+             f"tok_s={sp['shared']['tokens_per_s']:.0f};"
+             f"parity={sp['parity']};"
+             f"sharing_gain={sp['sharing_gain']:.2f};"
+             f"slot_gain={sp['slot_gain']:.2f};"
+             f"int8_parity={sp['int8_parity']}")
+        assert sp["parity"], (
+            "prefix sharing changed the fp token streams — shared pages "
+            "must be bit-identical to self-written ones")
+        assert sp["int8_parity"], (
+            "prefix sharing changed the int8 token streams")
+        assert sp["sharing_gain"] >= 2.0, (
+            f"shared-prefix pool packs only {sp['sharing_gain']:.2f}x "
+            f"live prefix tokens per page (expected >= 2x)")
+        assert sp["slot_gain"] >= 2.0, (
+            f"int8+shared pool admits only {sp['slot_gain']:.2f}x the "
+            f"slots of the fp unshared pool at fixed bytes")
+        assert sp["int8_live_slots"] >= sp["slots_int8_shared"], (
+            "live run never reached the computed concurrent-slot count")
+        assert sp["int8_live_completed"] == sp["slots_int8_shared"], (
+            "int8+shared live run dropped requests")
     return result
 
 
@@ -442,7 +606,7 @@ if __name__ == "__main__":
                     help="also run the sharded serve path on this "
                          "DATAxMODEL mesh (e.g. 1x8) or 'auto'")
     ap.add_argument("--scenario", default="all",
-                    choices=["all", "decode", "prefill"],
+                    choices=["all", "decode", "prefill", "shared-prefix"],
                     help="which serve scenario(s) to run")
     ap.add_argument("--out", default=None,
                     help="output json (default BENCH_serve.json for "

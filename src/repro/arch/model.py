@@ -436,7 +436,8 @@ def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int,
     return state
 
 
-def init_paged_kv(cfg: ArchConfig, n_pages: int, page_size: int) -> Tuple:
+def init_paged_kv(cfg: ArchConfig, n_pages: int, page_size: int,
+                  kv_dtype: str = "bf16") -> Tuple:
     """Allocate the physical page pool for the paged KV cache.
 
     Returns ``(k_pages, v_pages)``, each ``[n_layers, n_pages, page,
@@ -445,14 +446,24 @@ def init_paged_kv(cfg: ArchConfig, n_pages: int, page_size: int) -> Tuple:
     maps logical positions to pages, so short requests pin only the
     pages they reserve and freed pages recycle to the next admission.
     Dense-family stacks only (hybrid/enc-dec decode keeps the dense
-    cache; the paged cache is bf16 — int8 KV remains a dense-path
-    feature).
+    cache).
+
+    ``kv_dtype='int8'`` quantizes the pool (the paged analogue of the
+    dense int8 cache): returns ``(k_pages, v_pages, k_scales,
+    v_scales)`` with int8 value pools plus f32 per-page scale planes
+    ``[n_layers, n_pages, page, KV, 1]`` — the pool holds ~2x more
+    tokens per byte at the ``quantize_kv_int8`` round-trip bound.
     """
     if cfg.block_pattern or cfg.family == "encdec":
         raise ValueError("paged KV cache supports dense attention "
                          f"stacks only (got family={cfg.family!r})")
     shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads,
              cfg.head_dim_)
+    if kv_dtype == "int8":
+        sshape = shape[:-1] + (1,)
+        return (jnp.zeros(shape, jnp.int8), jnp.zeros(shape, jnp.int8),
+                jnp.zeros(sshape, jnp.float32),
+                jnp.zeros(sshape, jnp.float32))
     return (jnp.zeros(shape, COMPUTE_DTYPE), jnp.zeros(shape, COMPUTE_DTYPE))
 
 
@@ -474,8 +485,17 @@ def paged_decode_step(params, kv: Tuple, block_tbl, pos, tokens, n_new,
     by the caller, matching token-by-token seeding bit for bit.
     ``n_new[b] = 0`` marks an idle slot: its writes drop and its output
     row is garbage (finite), never read.
+
+    ``kv`` is the 2-tuple bf16 pool or the 4-tuple int8 pool (+ scale
+    planes) from ``init_paged_kv`` — the int8 path quantizes on write
+    and dequantizes inside the gathered attention, mirroring the dense
+    ``decode_step`` int8 cache.
     """
-    k_pages, v_pages = kv
+    int8 = len(kv) == 4
+    if int8:
+        k_pages, v_pages, k_scales, v_scales = kv
+    else:
+        k_pages, v_pages = kv
     B, C = tokens.shape
     N_pages, page = k_pages.shape[1], k_pages.shape[2]
     n_ps = block_tbl.shape[1]
@@ -500,9 +520,27 @@ def paged_decode_step(params, kv: Tuple, block_tbl, pos, tokens, n_new,
         x, _ = _ffn(layer_p, cfg, x, moe_impl)
         return x, (ck, cv)
 
-    x, (k_pages, v_pages) = jax.lax.scan(
-        body, x, (params["layers"], k_pages, v_pages, windows),
-        unroll=unroll)
+    def body8(x, xs):
+        layer_p, ck, cv, sk, sv, w = xs
+        h = rms_norm(x, layer_p["ln1"], cfg.norm_eps)
+        out, ck, cv, (sk, sv) = A.paged_decode_attention_block(
+            layer_p["mixer"], h, ck, cv, block_tbl, positions, page_ids,
+            page_off, n_heads=cfg.q_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta, window=w,
+            qk_norm=cfg.qk_norm, norm_eps=cfg.norm_eps,
+            kv_scales=(sk, sv))
+        x = x + out
+        x, _ = _ffn(layer_p, cfg, x, moe_impl)
+        return x, (ck, cv, sk, sv)
+
+    if int8:
+        x, new_kv = jax.lax.scan(
+            body8, x, (params["layers"], k_pages, v_pages, k_scales,
+                       v_scales, windows), unroll=unroll)
+    else:
+        x, new_kv = jax.lax.scan(
+            body, x, (params["layers"], k_pages, v_pages, windows),
+            unroll=unroll)
     # select each slot's last valid position BEFORE the vocab
     # projection: the head is the dominant decode matmul and only one
     # chunk position per slot is kept (rms_norm + einsum are
@@ -511,9 +549,8 @@ def paged_decode_step(params, kv: Tuple, block_tbl, pos, tokens, n_new,
     x = jnp.take_along_axis(x, last[:, None, None], axis=1)
     logits = lm_head(params, x, cfg.norm_eps)[:, 0]
     if sample_greedy:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32), \
-            (k_pages, v_pages)
-    return logits, (k_pages, v_pages)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_kv
+    return logits, new_kv
 
 
 def _decode_mixer(lp, cfg: ArchConfig, kind: str, x, window, cache, pos,

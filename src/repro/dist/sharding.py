@@ -229,7 +229,8 @@ def cache_shardings(state, mesh, batch: int):
 
 def paged_cache_pspec(leaf, mesh) -> P:
     """PartitionSpec for a paged KV page pool ``[stack, n_pages, page,
-    KV, hd]`` (see ``model.init_paged_kv``).
+    KV, hd]`` (see ``model.init_paged_kv``) — the int8 pool's f32 scale
+    planes ``[stack, n_pages, page, KV, 1]`` follow the same rule.
 
     Physical pages shard over ``data`` (the pool is the per-shard slot
     memory, like the dense cache's batch dim), and the *within-page*
@@ -260,8 +261,8 @@ def paged_kv_shardings(kv, mesh):
 # DeviceContinuousBatcher): a decode-state subtree under "decode" (or a
 # page pool under "pages"), flat per-slot arrays, per-request output
 # rings, and a scalar queue head.
-_SLOT_LEAVES = ("free", "req", "gen", "last", "hasf", "pos", "plen")
-_RING_LEAVES = ("out_tok", "out_len", "out_done", "out_drop")
+_SLOT_LEAVES = ("free", "req", "gen", "last", "hasf", "pos", "plen", "reg")
+_RING_LEAVES = ("out_tok", "out_len", "out_done", "out_drop", "out_tbl")
 
 
 def serve_pspec(path, leaf, mesh, batch: int) -> P:
@@ -272,14 +273,15 @@ def serve_pspec(path, leaf, mesh, batch: int) -> P:
       ``paged_cache_pspec`` (pages over data, within-page seq over
       model);
     * per-slot arrays (``free``/``req``/``gen``/``last``/``hasf``, the
-      paged ``pos``/``plen``, the ``[B, F]`` gate features, the
+      paged ``pos``/``plen``/``reg``, the ``[B, F]`` gate features, the
       ``[B, P]`` prompt buffer and the ``[B, n_ps]`` block table) shard
       their slot dim over data; the block table's page-list dim
       replicates;
-    * output rings and the free-page mask replicate — they are drained
-      to host every ``sync_every`` steps, and a replicated ring keeps
-      that drain one local read instead of an all-gather per round
-      trip;
+    * output rings (including the ``out_tbl`` block-table ring the
+      prefix cache registers from) and the page refcounts (``pref`` —
+      read by every slot's fill and drained to host at the end of each
+      run) replicate — a replicated ring keeps the ``sync_every`` drain
+      one local read instead of an all-gather per round trip;
     * scalars (queue ``head``) replicate.
     """
     names = _path_names(path)
@@ -289,7 +291,7 @@ def serve_pspec(path, leaf, mesh, batch: int) -> P:
         return paged_cache_pspec(leaf, mesh)
     shape = tuple(leaf.shape)
     name = names[-1] if names else ""
-    if not shape or name == "head" or name == "pfree" \
+    if not shape or name == "head" or name in ("pfree", "pref") \
             or name in _RING_LEAVES:
         return P(*([None] * len(shape)))
     if name in _SLOT_LEAVES or name in ("feat", "pbuf", "tbl"):

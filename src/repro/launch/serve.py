@@ -69,6 +69,21 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=8,
                     help="prompt tokens consumed per fused step on the "
                          "paged device path (1 = token-by-token)")
+    ap.add_argument("--share-prefix", action="store_true",
+                    help="paged cache: requests with a common token "
+                         "prefix share refcounted read-only prefix "
+                         "pages (COW on the partial tail page); needs "
+                         "--page-size")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="paged cache: int8 page pool with per-page "
+                         "scale planes (~2x pool tokens per byte at "
+                         "the quantize round-trip bound); needs "
+                         "--page-size")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="workload: prepend this many common prefix "
+                         "tokens to every prompt (exercises "
+                         "--share-prefix; counts toward --prompt-len "
+                         "budget checks)")
     ap.add_argument("--prompt-len", type=int, default=1,
                     help="max prompt length; prompts are drawn with "
                          "variable length in [1, prompt-len] "
@@ -107,8 +122,15 @@ def main(argv=None):
 
     if args.prompt_len > 1 and not args.page_size:
         ap.error("--prompt-len > 1 needs --page-size (paged KV cache)")
+    if (args.share_prefix or args.kv_int8) and not args.page_size:
+        ap.error("--share-prefix/--kv-int8 need --page-size (paged "
+                 "KV cache)")
+    if args.shared_prefix_len and not args.share_prefix:
+        ap.error("--shared-prefix-len needs --share-prefix")
     scfg = ServeConfig(max_batch=args.batch, cache_len=64,
-                       page_size=args.page_size, pages=args.pages)
+                       page_size=args.page_size, pages=args.pages,
+                       share_prefix=args.share_prefix,
+                       kv_int8=args.kv_int8)
 
     # wrap around the test set so any --requests count is serveable
     feats = ds.X_test[np.arange(args.requests) % len(ds.X_test)]
@@ -135,15 +157,29 @@ def main(argv=None):
             else:
                 cb = ContinuousBatcher(engine, eos_token=-1,
                                        max_tokens=args.tokens)
-        for rid in range(args.requests):
-            plen = int(rng.integers(1, args.prompt_len + 1))
-            cb.submit(rid,
-                      rng.integers(1, cfg.vocab_size, plen).tolist(),
-                      features=feats[rid])
-        t0 = time.perf_counter()
+        prefix = rng.integers(1, cfg.vocab_size,
+                              args.shared_prefix_len).tolist()
+        prompts = [
+            prefix + rng.integers(
+                1, cfg.vocab_size,
+                int(rng.integers(1, args.prompt_len + 1))).tolist()
+            for _ in range(args.requests)]
         # budget covers prefill too: the host loop costs one step per
         # prompt token, so prompt-heavy waves need the longer horizon
-        done = cb.run(max_steps=100 * (args.tokens + args.prompt_len))
+        budget = 100 * (args.tokens + args.prompt_len
+                        + args.shared_prefix_len)
+        # with sharing, run a small first wave to populate the prefix
+        # cache (the device batcher consults the trie at wave build),
+        # then serve the rest against the warm cache
+        split = (min(args.batch, args.requests) if args.share_prefix
+                 else args.requests)
+        t0 = time.perf_counter()
+        for rid in range(split):
+            cb.submit(rid, prompts[rid], features=feats[rid])
+        cb.run(max_steps=budget)
+        for rid in range(split, args.requests):
+            cb.submit(rid, prompts[rid], features=feats[rid])
+        done = cb.run(max_steps=budget)
         dt = time.perf_counter() - t0
         n_tok = sum(len(v) for v in done.values())
         tag = "router" if args.router else args.batcher
@@ -154,6 +190,11 @@ def main(argv=None):
         if args.router:
             print(f"  per-shard served: "
                   f"{[len(a) for a in cb.assigned]}")
+        if args.share_prefix:
+            ratio = (cb.prefix_tokens_per_page() if args.router
+                     else cb.pool.prefix_tokens_per_page())
+            print(f"  prefix sharing: {ratio:.2f} live prefix tokens "
+                  f"per pool page (1.0 = unshared)")
         return done
 
     # request stream: (flow features, prompt) through one generate() batch

@@ -212,7 +212,8 @@ def paged_decode_attention_block(
     window,
     qk_norm: bool,
     norm_eps: float,
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    kv_scales: Optional[Tuple[jax.Array, jax.Array]] = None,  # int8 pages
+) -> Tuple:
     """Chunked decode attention through a paged (block-table) KV cache.
 
     The serve-path analogue of ``decode_attention_block`` for the paged
@@ -235,20 +236,50 @@ def paged_decode_attention_block(
     position, the gathered axis has the same length, values and mask as
     the (unwrapped) dense cache axis, so logits match the dense path
     bit for bit (asserted by tests/test_serve.py).
+
+    ``kv_scales`` enables the **int8 page pool**: K/V are quantized per
+    token vector (``quantize_kv_int8``) on write, the f32 scale planes
+    (``[N_pages, page, KV, 1]``) scatter alongside the values, and the
+    gathered logical view dequantizes before the score einsum — the
+    serve-path analogue of ``decode_attention_block``'s int8 cache, at
+    the same ``<= scale/2`` round-trip bound.  Shared (prefix) pages
+    need nothing special: quantization is deterministic, so a shared
+    page holds bit-identical content to what each sharer would have
+    written itself.  Returns ``(out, k_pages, v_pages, new_scales)``
+    when quantized, the 3-tuple otherwise.
     """
     B, C, _ = x.shape
     N_pages, page = k_pages.shape[0], k_pages.shape[1]
     n_ps = block_tbl.shape[1]
     q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim, positions,
                            rope_theta, qk_norm, norm_eps)
-    k_pages = k_pages.at[page_ids, page_off].set(
-        k.astype(k_pages.dtype), mode="drop")
-    v_pages = v_pages.at[page_ids, page_off].set(
-        v.astype(v_pages.dtype), mode="drop")
+    if kv_scales is not None:
+        sk_pool, sv_pool = kv_scales
+        kq, ks = quantize_kv_int8(k)
+        vq, vs = quantize_kv_int8(v)
+        k_pages = k_pages.at[page_ids, page_off].set(kq, mode="drop")
+        v_pages = v_pages.at[page_ids, page_off].set(vq, mode="drop")
+        sk_pool = sk_pool.at[page_ids, page_off].set(
+            ks.astype(sk_pool.dtype), mode="drop")
+        sv_pool = sv_pool.at[page_ids, page_off].set(
+            vs.astype(sv_pool.dtype), mode="drop")
+    else:
+        k_pages = k_pages.at[page_ids, page_off].set(
+            k.astype(k_pages.dtype), mode="drop")
+        v_pages = v_pages.at[page_ids, page_off].set(
+            v.astype(v_pages.dtype), mode="drop")
     # logical view: pages gathered in table order -> [B, n_ps*page, KV, hd]
     gtbl = jnp.clip(block_tbl, 0, N_pages - 1)
-    kf = k_pages[gtbl].reshape(B, n_ps * page, *k_pages.shape[2:])
-    vf = v_pages[gtbl].reshape(B, n_ps * page, *v_pages.shape[2:])
+    if kv_scales is not None:
+        kf = (k_pages[gtbl].astype(x.dtype)
+              * sk_pool[gtbl].astype(x.dtype)).reshape(
+                  B, n_ps * page, *k_pages.shape[2:])
+        vf = (v_pages[gtbl].astype(x.dtype)
+              * sv_pool[gtbl].astype(x.dtype)).reshape(
+                  B, n_ps * page, *v_pages.shape[2:])
+    else:
+        kf = k_pages[gtbl].reshape(B, n_ps * page, *k_pages.shape[2:])
+        vf = v_pages[gtbl].reshape(B, n_ps * page, *v_pages.shape[2:])
     kf = _repeat_kv(kf.astype(x.dtype), n_heads)
     vf = _repeat_kv(vf.astype(x.dtype), n_heads)
     k_pos = jnp.broadcast_to(jnp.arange(n_ps * page)[None],
@@ -259,7 +290,10 @@ def paged_decode_attention_block(
     probs = jax.nn.softmax(s, axis=-1).astype(x.dtype)
     out = jnp.einsum("bhqs,bshd->bqhd", probs, vf).reshape(
         B, C, n_heads * head_dim)
-    return out @ p["wo"].astype(x.dtype), k_pages, v_pages
+    out = out @ p["wo"].astype(x.dtype)
+    if kv_scales is not None:
+        return out, k_pages, v_pages, (sk_pool, sv_pool)
+    return out, k_pages, v_pages
 
 
 def decode_attention_block(

@@ -1,6 +1,8 @@
 from .engine import (ContinuousBatcher, DeviceContinuousBatcher, ServeConfig,
                      ServeEngine)
+from .pages import PagePlan, PagePool, Reservation
 from .router import ShardedServe, stable_shard
 
-__all__ = ["ContinuousBatcher", "DeviceContinuousBatcher", "ServeConfig",
-           "ServeEngine", "ShardedServe", "stable_shard"]
+__all__ = ["ContinuousBatcher", "DeviceContinuousBatcher", "PagePlan",
+           "PagePool", "Reservation", "ServeConfig", "ServeEngine",
+           "ShardedServe", "stable_shard"]

@@ -34,8 +34,20 @@ Both batchers run either decode-cache layout:
   pool smaller than ``B x cache_len`` oversubscribes slots (more live
   slots at fixed cache memory).
 
+The paged pool is refcounted (``serve.pages.PagePool``) and grows two
+multipliers on top of paging:
+
+* ``share_prefix=True`` — requests with a common token prefix share
+  read-only prefix pages (prefix trie + cache holds, copy-on-write on
+  a partially matching tail page); N sharers pin ~1x instead of Nx
+  prefix pages, with streams bit-identical to the unshared pool.
+* ``kv_int8=True`` — int8 page pool with per-page f32 scale planes
+  (quantize on write, dequant in the gathered attention), ~2x pool
+  tokens per byte at the dense int8 cache's round-trip bound.
+
 Dropped requests record a reason in ``drop_reasons``: ``gate-reject``
-(Planter verdict) or ``queue-full`` (bounded ``max_queue``).
+(Planter verdict), ``queue-full`` (bounded ``max_queue``) or
+``empty-prompt`` (zero-token submit, which also raises).
 """
 from __future__ import annotations
 
@@ -52,6 +64,8 @@ from ..arch import model as M
 from ..arch.config import ArchConfig
 from ..core.pipeline import MappedModel
 from ..dist import sharding as SH
+from .pages import PagePool
+from .pages import page_demand as _page_demand
 
 
 @dataclasses.dataclass
@@ -69,6 +83,20 @@ class ServeConfig:
     # [B, cache_len] cache allows.
     page_size: int = 0
     pages: int = 0
+    # prefix sharing: requests with a common token prefix map their
+    # full prefix pages to shared read-only pool entries (refcounted,
+    # copy-on-write on the partial tail page) — N sharers pin ~1x
+    # instead of Nx prefix pages.  Streams are bit-identical to the
+    # unshared pool: shared pages hold exactly what each sharer would
+    # have written itself.
+    share_prefix: bool = False
+    # int8 page pool: quantize_kv_int8 on write + dequant on gather,
+    # ~2x more pool tokens per byte at the <= scale/2 round-trip bound
+    # (the paged analogue of the dense int8 cache).
+    kv_int8: bool = False
+    # cap on pages the prefix cache may hold (None = pool minus one
+    # full slot, so cached prefixes can never starve admission)
+    prefix_hold_budget: Optional[int] = None
 
     def __post_init__(self):
         if self.page_size:
@@ -76,6 +104,10 @@ class ServeConfig:
                 raise ValueError(
                     f"cache_len {self.cache_len} must be a multiple of "
                     f"page_size {self.page_size}")
+        elif self.share_prefix or self.kv_int8:
+            raise ValueError(
+                "share_prefix/kv_int8 are page-pool features: set "
+                "ServeConfig(page_size=...) to enable the paged cache")
 
     @property
     def paged(self) -> bool:
@@ -89,12 +121,30 @@ class ServeConfig:
     def n_pages(self) -> int:
         return self.pages or self.max_batch * self.pages_per_slot
 
+    @property
+    def kv_dtype(self) -> str:
+        return "int8" if self.kv_int8 else "bf16"
+
+    @property
+    def hold_budget(self) -> int:
+        if self.prefix_hold_budget is not None:
+            return self.prefix_hold_budget
+        return max(0, self.n_pages - min(self.n_pages, self.pages_per_slot))
+
+    def make_pool(self) -> PagePool:
+        """The host-side page allocator both batchers build on."""
+        return PagePool(self.n_pages, self.page_size,
+                        share_prefix=self.share_prefix,
+                        hold_budget=self.hold_budget)
+
 
 def page_demand(scfg: ServeConfig, prompt_len: int, max_tokens: int) -> int:
     """Pages a request pins while live: reservation-based admission
     (prompt + worst-case decode), so in-flight slots can never stall on
-    an empty pool and the step needs no mid-flight allocator."""
-    return -(-(prompt_len + max_tokens) // scfg.page_size)
+    an empty pool and the step needs no mid-flight allocator.  Delegates
+    to ``serve.pages.page_demand`` — the ONE reservation formula the
+    allocator, submit-side validation and the fused step all share."""
+    return _page_demand(scfg.page_size, prompt_len, max_tokens)
 
 
 def validate_prompt(scfg: ServeConfig, prompt_tokens, max_tokens: int,
@@ -109,7 +159,9 @@ def validate_prompt(scfg: ServeConfig, prompt_tokens, max_tokens: int,
     prompt = ([int(prompt_tokens)] if np.isscalar(prompt_tokens)
               else [int(t) for t in prompt_tokens])
     if not prompt:
-        raise ValueError("empty prompt")
+        raise ValueError(
+            "empty prompt: a request must carry at least one token — it "
+            "can never produce output and would reserve zero-demand pages")
     if scfg.paged:
         demand = page_demand(scfg, len(prompt), max_tokens)
         if demand > min(scfg.n_pages, scfg.pages_per_slot):
@@ -123,6 +175,23 @@ def validate_prompt(scfg: ServeConfig, prompt_tokens, max_tokens: int,
             "(ServeConfig(page_size=...)); the dense cache has one "
             "global position per step")
     return prompt
+
+
+def validate_prompt_or_drop(scfg: ServeConfig, request_id, prompt_tokens,
+                            max_tokens: int, dropped: list,
+                            drop_reasons: dict,
+                            dense_ok: bool = False) -> list:
+    """``validate_prompt`` with drop bookkeeping: an empty prompt is
+    recorded in ``drop_reasons`` (reason ``empty-prompt``) before the
+    ValueError surfaces, so the rejected request never silently vanishes
+    from accounting — and never reserves zero-demand pages."""
+    try:
+        return validate_prompt(scfg, prompt_tokens, max_tokens, dense_ok)
+    except ValueError as e:
+        if "empty prompt" in str(e):
+            dropped.append(request_id)
+            drop_reasons[request_id] = "empty-prompt"
+        raise
 
 
 class ServeEngine:
@@ -186,6 +255,12 @@ class ServeEngine:
             self._paged_sample = jax.jit(
                 lambda p, kv, tbl, pos, t, n: M.paged_decode_step(
                     p, kv, tbl, pos, t, n, cfg, sample_greedy=True))
+            # COW: seed a request's fresh tail page with a copy of a
+            # shared page (all layers, every pool leaf incl. scales)
+            self._copy_page = jax.jit(
+                lambda kv, s, d: jax.tree.map(
+                    lambda pool: pool.at[:, d].set(pool[:, s]), kv),
+                donate_argnums=(0,))
         else:
             self._paged_sample = None
 
@@ -212,7 +287,8 @@ class ServeEngine:
         keeps its own donated pool, same as the dense cache."""
         if self._paged_kv is None:
             kv = M.init_paged_kv(self.cfg, self.scfg.n_pages,
-                                 self.scfg.page_size)
+                                 self.scfg.page_size,
+                                 kv_dtype=self.scfg.kv_dtype)
             if self.mesh is not None:
                 kv = jax.device_put(
                     kv, SH.paged_kv_shardings(kv, self.mesh))
@@ -222,6 +298,13 @@ class ServeEngine:
     @paged_kv.setter
     def paged_kv(self, value):
         self._paged_kv = value
+
+    def copy_page(self, src: int, dst: int):
+        """Copy physical page ``src`` over ``dst`` in the host pool (the
+        COW half of prefix sharing: ``dst`` is a freshly reserved page
+        with refcount 1, never a page another request can see)."""
+        self._paged_kv = self._copy_page(self.paged_kv, jnp.int32(src),
+                                         jnp.int32(dst))
 
     def step_paged(self, tokens: np.ndarray, block_tbl: np.ndarray,
                    pos: np.ndarray, n_new: np.ndarray) -> np.ndarray:
@@ -336,12 +419,21 @@ class ContinuousBatcher:
         self.done_at: dict = {}  # request_id -> perf_counter at completion
         self.dropped: list = []
         self.drop_reasons: dict = {}  # request_id -> why it was dropped
+        self.max_live = 0  # peak concurrent slots (pool-sizing evidence)
         if scfg.paged:
-            # per-slot position offsets + block table + host-side pool
+            # per-slot position offsets + block table; allocation,
+            # refcounts and the prefix trie live in the shared PagePool
             self.slot_pos = np.zeros(B, np.int64)
             self.slot_tbl = np.full((B, scfg.pages_per_slot),
                                     scfg.n_pages, np.int32)
-            self.page_free = np.ones(scfg.n_pages, bool)
+            self.pool = scfg.make_pool()
+            self.slot_res: list = [None] * B
+
+    @property
+    def page_free(self) -> np.ndarray:
+        """Free-page mask view over the refcounted pool (a page is free
+        iff nothing — live slot or prefix cache — references it)."""
+        return self.pool.ref == 0
 
     def submit(self, request_id, prompt_tokens,
                features: Optional[np.ndarray] = None):
@@ -349,8 +441,9 @@ class ContinuousBatcher:
         bare int is accepted as a length-1 prompt); the host loop feeds
         it one token per step — the measured token-by-token baseline the
         chunked device path is benchmarked against."""
-        prompt = validate_prompt(self.engine.scfg, prompt_tokens,
-                                 self.max_tokens, dense_ok=True)
+        prompt = validate_prompt_or_drop(
+            self.engine.scfg, request_id, prompt_tokens, self.max_tokens,
+            self.dropped, self.drop_reasons, dense_ok=True)
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
             self.dropped.append(request_id)
             self.drop_reasons[request_id] = "queue-full"
@@ -366,29 +459,37 @@ class ContinuousBatcher:
 
     def _fill_slots(self):
         scfg = self.engine.scfg
+        if scfg.paged:
+            self.pool.begin_wave()
         for b in np.where(self.slot_free)[0]:
             if not self.queue:
                 break
             rid, prompt, feat = self.queue[0]
+            res = None
             if scfg.paged:
                 # reservation-based admission: the request's whole
-                # worst-case footprint must be free, so live slots never
-                # stall mid-stream; FIFO blocks (no leapfrogging) when
-                # the head doesn't fit — identical to the device step's
-                # in-fill capacity rule
-                demand = page_demand(scfg, len(prompt), self.max_tokens)
-                free_ids = np.where(self.page_free)[0]
-                if demand > len(free_ids):
+                # worst-case footprint (minus shared prefix pages) must
+                # be free, so live slots never stall mid-stream; FIFO
+                # blocks (no leapfrogging) when the head doesn't fit —
+                # identical to the device step's in-fill capacity rule
+                res = self.pool.reserve(prompt, self.max_tokens)
+                if res is None:
                     break
                 self.slot_tbl[b] = scfg.n_pages
-                self.slot_tbl[b, :demand] = free_ids[:demand]
-                self.page_free[free_ids[:demand]] = False
-                self.slot_pos[b] = 0
+                self.slot_tbl[b, : len(res.tbl)] = res.tbl
+                if res.cow is not None:
+                    # COW: the fresh tail page starts as a copy of the
+                    # partially-matching cached page; rows past the
+                    # match are stale until overwritten (mask-safe)
+                    self.engine.copy_page(*res.cow)
+                self.slot_pos[b] = res.start
+                self.slot_res[b] = res
             self.queue.popleft()
             self.slot_free[b] = False
             self.slot_req[b] = rid
             self.slot_prompt[b] = prompt
-            self.slot_ptr[b] = 0
+            # shared prefix tokens are already in the pool: skip them
+            self.slot_ptr[b] = res.start if res is not None else 0
             self.slot_gen[b] = []
             if feat is not None:
                 if self.slot_feat is None:
@@ -401,10 +502,12 @@ class ContinuousBatcher:
         self.done_at[self.slot_req[b]] = now
         self.slot_free[b] = True
         self.slot_req[b] = None
-        if self.engine.scfg.paged:  # release the slot's pages
-            owned = self.slot_tbl[b][
-                self.slot_tbl[b] < self.engine.scfg.n_pages]
-            self.page_free[owned] = True
+        if self.engine.scfg.paged:
+            # drop the slot's references; completed full prompt pages
+            # register in the prefix trie (a cache hold survives) so
+            # later same-prefix requests share instead of re-filling
+            self.pool.release(self.slot_res[b], self.slot_prompt[b])
+            self.slot_res[b] = None
             self.slot_tbl[b] = self.engine.scfg.n_pages
 
     def run(self, max_steps: int = 1000) -> dict:
@@ -415,6 +518,8 @@ class ContinuousBatcher:
                     and self.slot_feat is not None)
         for _ in range(max_steps):
             self._fill_slots()
+            self.max_live = max(self.max_live,
+                                int((~self.slot_free).sum()))
             if self.slot_free.all() and not self.queue:
                 break
             use_gate = use_gate or (self.engine._fused is not None
@@ -506,15 +611,18 @@ class DeviceContinuousBatcher:
         self.paged = scfg.paged
         if self.paged:
             # block-table cache: the physical page pool is the only
-            # big allocation; slot state (pos/plen/tbl/pbuf/pfree)
-            # joins the donated pytree per run
+            # big allocation; slot state (pos/plen/tbl/pbuf/pref)
+            # joins the donated pytree per run.  The PagePool is the
+            # host mirror of the in-step refcounts plus the prefix
+            # trie consulted at wave build and updated at drain.
             self._pages = M.init_paged_kv(engine.cfg, scfg.n_pages,
-                                          scfg.page_size)
+                                          scfg.page_size,
+                                          kv_dtype=scfg.kv_dtype)
             if self.mesh is not None:
                 self._pages = jax.device_put(
                     self._pages, SH.paged_kv_shardings(self._pages,
                                                        self.mesh))
-            self._pfree = np.ones(scfg.n_pages, bool)
+            self.pool = scfg.make_pool()
         else:
             self._decode = M.init_decode_state(engine.cfg, scfg.max_batch,
                                                scfg.cache_len)
@@ -542,8 +650,9 @@ class DeviceContinuousBatcher:
         step; the dense path has one global position per step, so it
         accepts single-token prompts only.
         """
-        prompt = validate_prompt(self.engine.scfg, prompt_tokens,
-                                 self.max_tokens)
+        prompt = validate_prompt_or_drop(
+            self.engine.scfg, request_id, prompt_tokens, self.max_tokens,
+            self.dropped, self.drop_reasons)
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
             self.dropped.append(request_id)
             self.drop_reasons[request_id] = "queue-full"
@@ -557,6 +666,12 @@ class DeviceContinuousBatcher:
         """Un-served load: queued entries + in-flight carryover slots
         (the router's rebalancing signal)."""
         return len(self.queue) + sum(c is not None for c in self._carry)
+
+    @property
+    def _pfree(self) -> np.ndarray:
+        """Free-page view over the refcounted pool mirror (a page is
+        free iff no live slot and no cached prefix references it)."""
+        return self.pool.ref == 0
 
     # ------------------------------------------------------------- step fn
     def _make_run_k(self, n_queue: int, n_out: int, n_feat: int) -> Callable:
@@ -652,19 +767,31 @@ class DeviceContinuousBatcher:
         Same schedule skeleton as the dense step (ascending-slot FIFO
         fill, gate verdict wired into eviction, done-mask drain), plus:
 
-        * fill allocates each admitted request's whole page reservation
-          (``ceil((prompt+max_tokens)/page)`` pages, lowest free pages
-          first, slot-major) and FIFO-blocks when the pool can't cover
-          the queue head — reservation admission means a live slot can
-          never stall waiting for a page;
-        * each step advances every active slot by up to
-          ``prefill_chunk`` prompt tokens (or exactly one decode token)
-          at its *own* position offset — a P-token prompt costs
-          ``ceil(P/chunk)`` launches instead of P;
+        * the pool is **refcounted** (``pref``, int32 per page; free =
+          count 0): fill allocates each admitted request's *own*-page
+          demand (``qdem``: worst-case footprint minus shared prefix
+          pages, lowest free pages first, slot-major) and takes one
+          reference on every table page — shared prefix pages
+          (``qsh``, planned by the host's prefix trie at wave build)
+          simply gain a second/third/... reference.  FIFO blocks when
+          the pool can't cover the queue head's own demand;
+        * a shared partial tail page (``qcow``) is **copied on write**
+          into the slot's first own page at fill — the copy target has
+          refcount 1 and is invisible to every other request, so a
+          shared page is never mutated;
+        * prefill starts at ``qstart`` (tokens already covered by
+          shared pages are skipped; the final prompt token is always
+          re-processed so its logits exist) and advances by up to
+          ``prefill_chunk`` prompt tokens per step at the slot's own
+          position offset;
         * a slot's next token is recorded only once its prompt is
           consumed (mid-prompt predictions are computed and discarded,
           matching token-by-token seeding bit for bit);
-        * eviction returns the slot's pages to the pool.
+        * eviction drops one reference per table page — except, for
+          completed ``reg`` slots, the full-prompt prefix pages, whose
+          reference transfers to the prefix cache (the host registers
+          them from the ``out_tbl`` ring at drain).  A page frees when
+          its count reaches zero.
         """
         cfg = self.engine.cfg
         scfg = self.engine.scfg
@@ -673,8 +800,11 @@ class DeviceContinuousBatcher:
         eos, max_tokens, Nq, R = self.eos, self.max_tokens, n_queue, n_out
         C = self.prefill_chunk
         n_ps, N = scfg.pages_per_slot, scfg.n_pages
+        page = scfg.page_size
+        share = scfg.share_prefix
 
-        def one_step(params, qtok, qlen, qreq, qfeat, qhasf, nq, st):
+        def one_step(params, qtok, qlen, qreq, qfeat, qhasf, qsh, qdem,
+                     qstart, qcow, qreg, nq, st):
             # --- fill + page reservation (FIFO, ascending slot index)
             free = st["free"]
             B = free.shape[0]
@@ -682,33 +812,60 @@ class DeviceContinuousBatcher:
             cand = st["head"] + rank
             idx = jnp.clip(cand, 0, Nq - 1)
             in_q = free & (cand < nq)
-            # pages per entry — the same reservation formula submit-side
-            # validation and the host fill use (floor-div works on jnp)
-            qd = page_demand(scfg, qlen, max_tokens)
-            d = jnp.where(in_q, qd[idx], 0)
-            take = in_q & (jnp.cumsum(d) <= st["pfree"].sum())
-            need = take[:, None] & (jnp.arange(n_ps)[None] < d[:, None])
+            # own-page demand: the reservation formula minus the pages
+            # the prefix trie already holds (precomputed at wave build,
+            # the same rule submit-side validation enforces)
+            d = jnp.where(in_q, qdem[idx], 0)
+            take = in_q & (jnp.cumsum(d) <= (st["pref"] == 0).sum())
+            d = jnp.where(take, d, 0)
+            need = jnp.arange(n_ps)[None] < d[:, None]
             flat = need.reshape(-1)
             r = jnp.clip(jnp.cumsum(flat) - 1, 0, N - 1)
-            pg = jnp.argsort(~st["pfree"])[r]  # lowest free pages first
-            tbl = jnp.where(need, pg.reshape(B, n_ps),
-                            jnp.where(take[:, None], N, st["tbl"]))
-            pfree = st["pfree"].at[
-                jnp.where(flat, pg, N)].set(False, mode="drop")
+            pg = jnp.argsort(st["pref"] != 0)[r]  # lowest free pages 1st
+            own = jnp.where(need, pg.reshape(B, n_ps), N)
+            # table: shared prefix pages first, own pages after
+            nsh = jnp.where(take, (qsh[idx] < N).sum(axis=1), 0)
+            jj = jnp.arange(n_ps)[None]
+            own_shift = jnp.take_along_axis(
+                own, jnp.clip(jj - nsh[:, None], 0, n_ps - 1), axis=1)
+            tbl_new = jnp.where(jj < nsh[:, None], qsh[idx], own_shift)
+            tbl_new = jnp.where(jj < (nsh + d)[:, None], tbl_new, N)
+            pref = st["pref"].at[
+                jnp.where(take[:, None] & (tbl_new < N), tbl_new, N)
+            ].add(1, mode="drop")
+            # COW: seed the first own page with the partially-matching
+            # cached page (dst has refcount 1: only this slot sees it).
+            # share is static at trace time, so unshared serving never
+            # pays the per-step page gather/scatter.
+            if share:
+                csrc = jnp.where(take, qcow[idx], N)
+                cdst = jnp.where(
+                    csrc < N,
+                    jnp.take_along_axis(
+                        tbl_new, jnp.clip(nsh, 0, n_ps - 1)[:, None],
+                        axis=1)[:, 0], N)
+                pages = jax.tree.map(
+                    lambda pool: pool.at[:, cdst].set(
+                        pool[:, jnp.clip(csrc, 0, N - 1)], mode="drop"),
+                    st["pages"])
+            else:
+                pages = st["pages"]
             st = dict(
                 st,
                 req=jnp.where(take, qreq[idx], st["req"]),
                 plen=jnp.where(take, qlen[idx], st["plen"]),
-                pos=jnp.where(take, 0, st["pos"]),
+                pos=jnp.where(take, qstart[idx], st["pos"]),
                 pbuf=jnp.where(take[:, None], qtok[idx], st["pbuf"]),
                 last=jnp.where(take, 0, st["last"]),
                 feat=jnp.where(take[:, None], qfeat[idx], st["feat"]),
                 hasf=jnp.where(take, qhasf[idx], st["hasf"]),
                 gen=jnp.where(take, 0, st["gen"]),
+                reg=jnp.where(take, qreg[idx], st["reg"]),
                 free=free & ~take,
                 head=st["head"] + take.sum(),
-                tbl=tbl,
-                pfree=pfree,
+                tbl=jnp.where(take[:, None], tbl_new, st["tbl"]),
+                pref=pref,
+                pages=pages,
             )
             work = (~st["free"]).any()
 
@@ -748,9 +905,15 @@ class DeviceContinuousBatcher:
                 gen = gen + live.astype(jnp.int32)
                 fin = live & ((gen >= max_tokens) | (nxt == eos))
                 evict = gdrop | fin
-                pfree = st["pfree"].at[jnp.where(
-                    evict[:, None] & (st["tbl"] < N), st["tbl"],
-                    N)].set(True, mode="drop")
+                # drop one reference per table page; a completed reg
+                # slot's full-prompt pages keep theirs (it becomes the
+                # prefix-cache hold, registered by the host at drain)
+                jj2 = jnp.arange(n_ps)[None]
+                hold = (st["reg"] & fin)[:, None] & \
+                    (jj2 < (plen // page)[:, None])
+                dec = evict[:, None] & (st["tbl"] < N) & ~hold
+                pref = st["pref"].at[
+                    jnp.where(dec, st["tbl"], N)].add(-1, mode="drop")
                 fidx = jnp.where(fin, req, R)
                 return dict(
                     st,
@@ -760,17 +923,20 @@ class DeviceContinuousBatcher:
                     gen=gen,
                     last=jnp.where(live, nxt, st["last"]),
                     tbl=jnp.where(evict[:, None], N, st["tbl"]),
-                    pfree=pfree,
+                    pref=pref,
                     out_tok=out_tok,
                     out_len=st["out_len"].at[fidx].set(gen, mode="drop"),
                     out_done=st["out_done"].at[fidx].set(True, mode="drop"),
                     out_drop=out_drop,
+                    out_tbl=st["out_tbl"].at[fidx].set(
+                        st["tbl"], mode="drop"),
                 )
 
             st = jax.lax.cond(work, decode_and_evict, lambda s: s, st)
             return st, work
 
-        def run_k(params, st, qtok, qlen, qreq, qfeat, qhasf, nq, k):
+        def run_k(params, st, qtok, qlen, qreq, qfeat, qhasf, qsh, qdem,
+                  qstart, qcow, qreg, nq, k):
             def cond(carry):
                 i, _, alive = carry
                 return (i < k) & alive
@@ -778,7 +944,8 @@ class DeviceContinuousBatcher:
             def body(carry):
                 i, st, _ = carry
                 st, alive = one_step(params, qtok, qlen, qreq, qfeat,
-                                     qhasf, nq, st)
+                                     qhasf, qsh, qdem, qstart, qcow,
+                                     qreg, nq, st)
                 return i + 1, st, alive
 
             _, st, alive = jax.lax.while_loop(
@@ -829,21 +996,53 @@ class DeviceContinuousBatcher:
             p_max = max(4, 1 << (longest - 1).bit_length())
             qtok = np.zeros((Nq, p_max), np.int32)
             qlen = np.zeros(Nq, np.int32)
+            scfg = eng.scfg
+            NP, n_ps = scfg.n_pages, scfg.pages_per_slot
+            qsh = np.full((Nq, n_ps), NP, np.int32)
+            qdem = np.zeros(Nq, np.int32)
+            qstart = np.zeros(Nq, np.int32)
+            qcow = np.full(Nq, NP, np.int32)
+            qreg = np.zeros(Nq, bool)
+            self.pool.begin_wave()
         else:
             qtok = np.zeros(Nq, np.int32)
         qreq = np.zeros(Nq, np.int32)
         qfeat = np.zeros((Nq, n_feat), np.int32)
         qhasf = np.zeros(Nq, bool)
+        # qi -> (prompt, register-on-completion) for drain registration
+        winfo: List[Tuple[list, bool]] = [
+            (c["prompt"], c.get("reg", False)) if self.paged else ([], False)
+            for _, c in carry]
+        wplans: List = []  # kept-index -> PagePlan (stats at drain)
         for k, (_, prompt, f) in enumerate(kept):
             if self.paged:
                 qtok[k, : len(prompt)] = prompt
                 qlen[k] = len(prompt)
+                # prefix-trie plan: shared prefix pages, start offset,
+                # COW source, own-page demand, cache-hold budget verdict
+                plan = self.pool.plan(prompt, self.max_tokens)
+                qsh[k, : len(plan.shared)] = plan.shared
+                qdem[k] = plan.own
+                qstart[k] = plan.start
+                if plan.cow_src is not None:
+                    qcow[k] = plan.cow_src
+                qreg[k] = plan.reg
+                winfo.append((prompt, plan.reg))
+                wplans.append(plan)
             else:
+                winfo.append(([], False))
                 qtok[k] = prompt[0]
             qreq[k] = C + k  # output row: carryover rows come first
             if f is not None:
                 qfeat[k, : len(f)] = f[:n_feat]
                 qhasf[k] = True
+        if self.paged and eng.scfg.share_prefix:
+            # pressure-release cached prefixes (LRU leaf-first) so the
+            # wave's largest own-demand can eventually be met; pages the
+            # wave itself shares are pinned
+            keep_pin = set(int(p) for p in qsh[qsh < NP])
+            keep_pin |= set(int(p) for p in qcow[qcow < NP])
+            self.pool.ensure_free(int(qdem.max(initial=0)), keep_pin)
 
         B = self._B
         free = np.ones(B, bool)
@@ -859,6 +1058,7 @@ class DeviceContinuousBatcher:
             plen = np.zeros(B, np.int32)
             pbuf = np.zeros((B, p_max), np.int32)
             tbl = np.full((B, scfg.pages_per_slot), scfg.n_pages, np.int32)
+            reg = np.zeros(B, bool)
         for row, (b, c) in enumerate(carry):  # resume in-flight slots
             free[b] = False
             req[b] = row
@@ -873,6 +1073,7 @@ class DeviceContinuousBatcher:
                 plen[b] = len(c["prompt"])
                 pbuf[b, : len(c["prompt"])] = c["prompt"]
                 tbl[b] = c["tbl"]
+                reg[b] = c.get("reg", False)
         st = {
             "free": jnp.asarray(free),
             "req": jnp.asarray(req),
@@ -893,11 +1094,16 @@ class DeviceContinuousBatcher:
                 plen=jnp.asarray(plen),
                 pbuf=jnp.asarray(pbuf),
                 tbl=jnp.asarray(tbl),
-                pfree=jnp.asarray(self._pfree),
+                reg=jnp.asarray(reg),
+                pref=jnp.asarray(self.pool.ref),
+                out_tbl=jnp.full((R, scfg.pages_per_slot), scfg.n_pages,
+                                 jnp.int32),
             )
             args = (jnp.asarray(qtok), jnp.asarray(qlen),
                     jnp.asarray(qreq), jnp.asarray(qfeat),
-                    jnp.asarray(qhasf), jnp.int32(n))
+                    jnp.asarray(qhasf), jnp.asarray(qsh),
+                    jnp.asarray(qdem), jnp.asarray(qstart),
+                    jnp.asarray(qcow), jnp.asarray(qreg), jnp.int32(n))
         else:
             st["decode"] = self._decode
             args = (jnp.asarray(qtok), jnp.asarray(qreq),
@@ -943,16 +1149,31 @@ class DeviceContinuousBatcher:
                 break
         if self.paged:
             self._pages = st["pages"]
-            self._pfree = np.asarray(st["pfree"])
+            self.pool.ref[:] = np.asarray(st["pref"])
+            # sharing stats: count exactly the entries the step admitted
+            # this run (head = queue entries consumed); re-enqueued
+            # entries are re-planned — and re-counted — only once they
+            # actually land in a slot on a later run
+            for k in range(min(int(np.asarray(st["head"])), n)):
+                self.pool.record_plan(wplans[k], len(kept[k][1]))
         else:
             self._decode = st["decode"]
         out_tok = np.asarray(st["out_tok"])
         out_len = np.asarray(st["out_len"])
         out_drop = np.asarray(st["out_drop"])
+        out_tbl = (np.asarray(st["out_tbl"]) if self.paged else None)
         for qi in range(C + n):
             if seen[qi]:
                 self.done[req_ids[qi]] = [
                     int(t) for t in out_tok[qi, : out_len[qi]]]
+                if self.paged and winfo[qi][1]:
+                    # the fused step kept one reference on this slot's
+                    # full-prompt pages at eviction; hand them to the
+                    # prefix trie (duplicates release the extra hold)
+                    prompt = winfo[qi][0]
+                    nfp = len(prompt) // eng.scfg.page_size
+                    self.pool.register_completed(
+                        prompt, [int(p) for p in out_tbl[qi][:nfp]])
             elif out_drop[qi]:
                 self.dropped.append(req_ids[qi])
                 self.drop_reasons[req_ids[qi]] = "gate-reject"
@@ -971,6 +1192,7 @@ class DeviceContinuousBatcher:
                 s_plen = np.asarray(st["plen"])
                 s_pbuf = np.asarray(st["pbuf"])
                 s_tbl = np.asarray(st["tbl"])
+                s_reg = np.asarray(st["reg"])
             for b in range(B):
                 if s_free[b]:
                     continue
@@ -985,7 +1207,8 @@ class DeviceContinuousBatcher:
                         pos=int(s_pos[b]),
                         prompt=[int(t)
                                 for t in s_pbuf[b, : s_plen[b]]],
-                        tbl=s_tbl[b].copy())
+                        tbl=s_tbl[b].copy(),
+                        reg=bool(s_reg[b]))
             head = int(np.asarray(st["head"]))
             for rid, prompt, f in reversed(kept[head:]):
                 self.queue.appendleft((rid, prompt, f))

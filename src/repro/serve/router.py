@@ -44,7 +44,7 @@ import numpy as np
 from ..dist import sharding as SH
 from ..launch.mesh import data_submeshes
 from .engine import (DeviceContinuousBatcher, ServeConfig, ServeEngine,
-                     validate_prompt)
+                     validate_prompt_or_drop)
 
 
 def stable_shard(request_id: Any, n_shards: int) -> int:
@@ -124,9 +124,11 @@ class ShardedServe:
         prompt), threaded through to the shard's chunked prefill."""
         # same validation the shard batchers apply, surfaced at submit
         # instead of mid-route (where a failed request would vanish
-        # from done/dropped accounting)
-        prompt = validate_prompt(self._scfg, prompt_tokens,
-                                 self.max_tokens)
+        # from done/dropped accounting); empty prompts record their
+        # drop reason before the ValueError surfaces
+        prompt = validate_prompt_or_drop(
+            self._scfg, request_id, prompt_tokens, self.max_tokens,
+            self._adm_dropped, self.drop_reasons)
         self.pending.append((
             request_id, prompt,
             None if features is None else np.asarray(features)))
@@ -135,6 +137,22 @@ class ShardedServe:
     def queue_depths(self) -> List[int]:
         """Un-served load per shard: device queue + in-flight slots."""
         return [b.pending_work() for b in self.batchers]
+
+    def prefix_tokens_per_page(self) -> float:
+        """Fleet-wide prefix-sharing ratio: full-page prompt tokens per
+        distinct pool page, summed over every shard's page pool (1.0
+        when nothing is shared; ``ServeConfig(share_prefix=True)``
+        threads through ``scfg`` to each shard's pool)."""
+        if not self._scfg.paged:
+            return 1.0
+        tokens = pages = 0
+        for b in self.batchers:
+            t, p = b.pool.prefix_page_counts()
+            tokens += t
+            pages += p
+        if pages == 0:
+            return 1.0
+        return tokens / (self._scfg.page_size * pages)
 
     def _route(self):
         pending, self.pending = self.pending, []

@@ -5,10 +5,11 @@
 #
 # Phases (each failure is reported distinctly, with its own exit code,
 # so a serve-bench break is never mistaken for a pytest failure):
-#   serve-bench-smoke    tiny CPU run of both batcher paths   (exit 41)
-#   serve-bench-sharded  sharded router parity on a 1xN mesh  (exit 42)
-#   serve-bench-prefill  chunked paged prefill parity smoke   (exit 43)
-#   pytest               the tier-1 suite                     (pytest's)
+#   serve-bench-smoke          tiny CPU run of both batcher paths   (exit 41)
+#   serve-bench-sharded        sharded router parity on a 1xN mesh  (exit 42)
+#   serve-bench-prefill        chunked paged prefill parity smoke   (exit 43)
+#   serve-bench-shared-prefix  prefix-sharing + int8 page pool      (exit 44)
+#   pytest                     the tier-1 suite                     (pytest's)
 #
 # Bench JSONs land in ${BENCH_DIR:-/tmp/bench-artifacts} so CI can
 # upload them as workflow artifacts.
@@ -45,8 +46,19 @@ PYTHONPATH=src:. python -m benchmarks.serve_bench --smoke \
     --scenario prefill --out "$BENCH_DIR/BENCH_serve_prefill.json" \
     || fail serve-bench-prefill 43
 
+# prefix-sharing rot-check: shared fp/int8 streams must be bit-identical
+# to unshared, and the refcounted pool must hit the >= 2x sharing and
+# fixed-byte slot gains (runs on every device-count leg)
+echo "[test.sh] phase: serve-bench-shared-prefix"
+PYTHONPATH=src:. python -m benchmarks.serve_bench --smoke \
+    --scenario shared-prefix \
+    --out "$BENCH_DIR/BENCH_serve_shared_prefix.json" \
+    || fail serve-bench-shared-prefix 44
+
 echo "[test.sh] phase: pytest"
-python -m pytest -x -q "$@"
+# --durations surfaces the slowest tests in the CI log so suite-time
+# regressions are attributable to a specific test
+python -m pytest -x -q --durations=15 "$@"
 rc=$?
 [ "$rc" -ne 0 ] && fail pytest "$rc"
 echo "[test.sh] all phases passed"

@@ -37,6 +37,73 @@ def test_quantize_kv_int8_zero_vector_safe():
     assert (np.asarray(scale) > 0).all()  # clamped, never divides by 0
 
 
+def test_int8_page_scatter_gather_round_trip_bound():
+    """The int8 page pool's write->gather->dequant path preserves every
+    written cell within the quantize_kv_int8 bound (<= scale/2): the
+    page scatter and the block-table gather never corrupt values, so
+    the paged int8 cache inherits the dense cache's error bound."""
+    rng = np.random.default_rng(1)
+    B, C, KV, hd, n_ps = 2, 6, 2, 16, 3
+    N = B * n_ps
+    x = jnp.asarray(rng.normal(0, 2.0, (B, C, KV, hd)).astype(np.float32),
+                    jnp.bfloat16)
+    kq, ks = A.quantize_kv_int8(x)
+    pool = jnp.zeros((N, PAGE, KV, hd), jnp.int8)
+    spool = jnp.zeros((N, PAGE, KV, 1), jnp.float32)
+    tbl = jnp.asarray(np.arange(N).reshape(B, n_ps)[:, ::-1].copy())
+    pos0 = PAGE - 2  # chunk straddles a page boundary
+    positions = pos0 + jnp.arange(C)[None]
+    page_ids = jnp.take_along_axis(
+        tbl, jnp.clip(positions // PAGE, 0, n_ps - 1).repeat(B, 0), axis=1)
+    page_off = (positions % PAGE).repeat(B, 0)
+    pool = pool.at[page_ids, page_off].set(kq, mode="drop")
+    spool = spool.at[page_ids, page_off].set(ks, mode="drop")
+    view = pool[tbl].reshape(B, n_ps * PAGE, KV, hd).astype(np.float32)
+    sview = spool[tbl].reshape(B, n_ps * PAGE, KV, 1)
+    dq = np.asarray(view) * np.asarray(sview)
+    xf = np.asarray(x, np.float32)
+    bound = np.asarray(ks) / 2 + 1e-6
+    for j in range(C):
+        cell = dq[:, pos0 + j]
+        err = np.abs(cell - xf[:, j])
+        assert (err <= bound[:, j]).all(), (j, float(err.max()))
+
+
+def test_paged_attention_int8_close_to_fp():
+    """One paged attention call, fp pool vs int8 pool from the same
+    empty state: outputs agree within the int8 cache tolerance (the
+    only divergence is the <= scale/2 dequant error on just-written
+    K/V)."""
+    rng = np.random.default_rng(11)
+    B, H, hd, n_ps = 2, 2, 16, 2
+    D = H * hd
+    N = B * n_ps
+    p = A.init_attention(jax.random.PRNGKey(2), D, H, H, hd)
+    tbl = jnp.asarray(np.arange(N).reshape(B, n_ps))
+    x = jnp.asarray(rng.normal(0, 1, (B, PAGE, D)), jnp.float32)
+    positions = jnp.broadcast_to(jnp.arange(PAGE)[None], (B, PAGE))
+    page_ids = jnp.take_along_axis(tbl, positions // PAGE, axis=1)
+    page_off = positions % PAGE
+
+    def run(kv_scales, kp, vp):
+        return A.paged_decode_attention_block(
+            p, x, kp, vp, tbl, positions, page_ids, page_off,
+            n_heads=H, n_kv_heads=H, head_dim=hd, rope_theta=0.0,
+            window=jnp.int32(0), qk_norm=False, norm_eps=1e-6,
+            kv_scales=kv_scales)
+
+    out_fp, _, _ = run(None, jnp.zeros((N, PAGE, H, hd), jnp.float32),
+                       jnp.zeros((N, PAGE, H, hd), jnp.float32))
+    out_i8, kp8, _, (sk, sv) = run(
+        (jnp.zeros((N, PAGE, H, 1), jnp.float32),
+         jnp.zeros((N, PAGE, H, 1), jnp.float32)),
+        jnp.zeros((N, PAGE, H, hd), jnp.int8),
+        jnp.zeros((N, PAGE, H, hd), jnp.int8))
+    assert kp8.dtype == jnp.int8
+    scale = float(jnp.max(jnp.abs(out_fp)))
+    assert float(jnp.max(jnp.abs(out_fp - out_i8))) < 0.05 * scale
+
+
 def _naive_attention(q, k, v, q_pos, k_pos, window, causal):
     """Reference softmax attention with an explicit position mask."""
     hd = q.shape[-1]

@@ -227,6 +227,108 @@ def test_router_submit_validates_prompts(setup):
     assert router_p.submit(1, list(range(1, 9)))  # fits: accepted
 
 
+def _prefix_prompts(n=10, seed=4, prefix_len=12, tail_max=6):
+    rng = np.random.default_rng(seed)
+    prefix = [int(t) for t in rng.integers(1, 97, prefix_len)]
+    return {rid: prefix + [int(t) for t in
+                           rng.integers(1, 97, rng.integers(1, tail_max))]
+            for rid in range(n)}
+
+
+def _run_waves(router, prompts, waves=("a", "b"), max_steps=500):
+    done = {}
+    for w in waves:
+        for rid, p in prompts.items():
+            router.submit((w, rid), p, features=DS.X_test[rid])
+        done[w] = dict(router.run(max_steps=max_steps))
+    return done
+
+
+def test_shared_prefix_router_parity_1xM(setup):
+    """Prefix sharing through the router on one data shard: both waves
+    (trie cold, then warm) bit-identical to the unshared router, and the
+    fleet-wide sharing ratio really rises above 1."""
+    cfg, params, _, gate = setup
+    prompts = _prefix_prompts()
+
+    def make(share):
+        return ShardedServe(
+            cfg, params,
+            ServeConfig(max_batch=4, cache_len=32, page_size=8,
+                        share_prefix=share),
+            make_serve_mesh("auto"), gate=gate, eos_token=-1,
+            max_tokens=MAX_TOKENS, sync_every=2, prefill_chunk=4)
+
+    plain, shared = make(False), make(True)
+    done_p = _run_waves(plain, prompts)
+    done_s = _run_waves(shared, prompts)
+    assert done_s == done_p
+    assert shared.prefix_tokens_per_page() > 1.0
+    assert plain.prefix_tokens_per_page() == 1.0
+
+
+def test_shared_prefix_router_parity_multi_shard(setup):
+    """Same contract on a 2xM mesh: per-shard trie, per-shard parity
+    with the unshared router (routing is rid-deterministic, so the two
+    routers see identical per-shard schedules)."""
+    if jax.device_count() < 2:
+        pytest.skip("needs >=2 devices (run under test.sh)")
+    cfg, params, _, gate = setup
+    mesh = make_serve_mesh(f"2x{jax.device_count() // 2}")
+    prompts = _prefix_prompts(seed=6)
+
+    def make(share):
+        return ShardedServe(
+            cfg, params,
+            ServeConfig(max_batch=4, cache_len=32, page_size=8,
+                        share_prefix=share),
+            mesh, gate=gate, eos_token=-1, max_tokens=MAX_TOKENS,
+            sync_every=2, prefill_chunk=4)
+
+    plain, shared = make(False), make(True)
+    done_p = _run_waves(plain, prompts)
+    done_s = _run_waves(shared, prompts)
+    assert done_s == done_p
+    assert shared.assigned == plain.assigned  # identical routing
+    assert shared.prefix_tokens_per_page() > 1.0
+
+
+def test_int8_paged_router_shared_eq_unshared(setup):
+    """int8 page pool through the router: int8-shared streams equal
+    int8-unshared streams on the mesh (quantization is deterministic,
+    so shared quantized pages are bit-identical to self-written ones)."""
+    cfg, params, _, gate = setup
+    prompts = _prefix_prompts(seed=8)
+
+    def make(share):
+        return ShardedServe(
+            cfg, params,
+            ServeConfig(max_batch=4, cache_len=32, page_size=8,
+                        kv_int8=True, share_prefix=share),
+            make_serve_mesh("auto"), gate=gate, eos_token=-1,
+            max_tokens=MAX_TOKENS, sync_every=2, prefill_chunk=4)
+
+    plain, shared = make(False), make(True)
+    done_p = _run_waves(plain, prompts)
+    done_s = _run_waves(shared, prompts)
+    assert done_s == done_p
+    # done is cumulative: after wave b every request is accounted for
+    assert len(done_p["b"]) + len(plain.dropped) == 2 * len(prompts)
+
+
+def test_router_empty_prompt_rejected(setup):
+    """Satellite regression at the router: empty prompts fail at submit
+    with the drop reason recorded (never routed, never reserved)."""
+    cfg, params, scfg, gate = setup
+    router = ShardedServe(cfg, params, scfg, make_serve_mesh("auto"),
+                          gate=gate, eos_token=-1, max_tokens=MAX_TOKENS)
+    with pytest.raises(ValueError, match="empty prompt"):
+        router.submit("e", [])
+    router.run(max_steps=10)
+    assert router.drop_reasons["e"] == "empty-prompt"
+    assert "e" in router.dropped and not router.pending
+
+
 def test_rebalance_spills_to_shallowest(setup):
     """With zero depth slack, routing levels the queues regardless of
     where requests hash."""

@@ -210,12 +210,13 @@ def test_device_batcher_multi_wave_reuses_cache(engine):
 # ---------------------------------------------------------------------------
 
 
-def _paged_engine(engine, batch=4, cache_len=32, page_size=8, pages=0):
+def _paged_engine(engine, batch=4, cache_len=32, page_size=8, pages=0,
+                  **kw):
     eng, res = engine
     return ServeEngine(
         eng.cfg, eng.params,
         ServeConfig(max_batch=batch, cache_len=cache_len,
-                    page_size=page_size, pages=pages),
+                    page_size=page_size, pages=pages, **kw),
         gate=res.mapped)
 
 
@@ -390,6 +391,175 @@ def test_dense_device_rejects_multi_token_prompts(engine):
     dev = DeviceContinuousBatcher(_fresh_engine(engine), eos_token=-1)
     with pytest.raises(ValueError, match="paged"):
         dev.submit(0, [1, 2, 3])
+
+
+# ---------------------------------------------------------------------------
+# Prefix sharing + int8 page pool
+# ---------------------------------------------------------------------------
+
+
+def _prefix_prompts(n=8, seed=3, prefix_len=12, tail_max=6):
+    """Prompts sharing a common token prefix (the sharing workload)."""
+    rng = np.random.default_rng(seed)
+    prefix = [int(t) for t in rng.integers(1, 97, prefix_len)]
+    return [prefix + [int(t) for t in
+                      rng.integers(1, 97, rng.integers(1, tail_max))]
+            for _ in range(n)]
+
+
+def test_shared_prefix_host_bit_identical(engine):
+    """Host batcher: prefix sharing is invisible in the streams — shared
+    pages hold exactly what each sharer would have written itself, so
+    the shared run is bit-identical to the unshared run, while the pool
+    records real sharing (and at least one COW on a partial tail)."""
+    prompts = _prefix_prompts()
+    plain = ContinuousBatcher(_paged_engine(engine), eos_token=-1,
+                              max_tokens=4)
+    shared = ContinuousBatcher(_paged_engine(engine, share_prefix=True),
+                               eos_token=-1, max_tokens=4)
+    done_p = _run_prompt_workload(plain, prompts)
+    done_s = _run_prompt_workload(shared, prompts)
+    assert done_s == done_p
+    assert shared.pool.stats["shared_tokens"] > 0
+    assert shared.pool.stats["cow_events"] > 0
+    assert shared.pool.prefix_tokens_per_page() > 1.0
+    # held pages are exactly the cached ones, one hold each
+    held = np.where(shared.pool.ref > 0)[0]
+    assert set(held.tolist()) == shared.pool.cached_pages()
+    assert (shared.pool.ref[held] == 1).all()
+
+
+def test_shared_prefix_device_bit_identical_multiwave(engine):
+    """Device batcher: wave 1 populates the prefix trie (registration at
+    drain), wave 2 shares it — both waves' streams bit-identical to an
+    unshared device batcher fed the same two waves."""
+    prompts = _prefix_prompts()
+    plain = DeviceContinuousBatcher(_paged_engine(engine), eos_token=-1,
+                                    max_tokens=4, sync_every=3,
+                                    prefill_chunk=4)
+    shared = DeviceContinuousBatcher(
+        _paged_engine(engine, share_prefix=True), eos_token=-1,
+        max_tokens=4, sync_every=3, prefill_chunk=4)
+    for wave in ("a", "b"):
+        for rid, p in enumerate(prompts):
+            plain.submit((wave, rid), p, features=DS.X_test[rid])
+            shared.submit((wave, rid), p, features=DS.X_test[rid])
+        done_p = dict(plain.run(max_steps=600))
+        done_s = dict(shared.run(max_steps=600))
+        assert done_s == done_p, f"wave {wave} diverged under sharing"
+    assert shared.pool.stats["shared_tokens"] > 0  # wave 2 really shared
+    held = np.where(shared.pool.ref > 0)[0]
+    assert set(held.tolist()) == shared.pool.cached_pages()
+
+
+def test_shared_prefix_bounded_runs_resume(engine):
+    """Sharing survives the resume path: repeated 3-step bounded runs
+    (holds, refcounts and carried block tables crossing run boundaries)
+    reproduce the un-interrupted shared run exactly."""
+    prompts = _prefix_prompts(seed=5)
+    ref = DeviceContinuousBatcher(_paged_engine(engine, share_prefix=True),
+                                  eos_token=-1, max_tokens=4,
+                                  sync_every=3, prefill_chunk=3)
+    done_ref = _run_prompt_workload(ref, prompts)
+    dev = DeviceContinuousBatcher(_paged_engine(engine, share_prefix=True),
+                                  eos_token=-1, max_tokens=4,
+                                  sync_every=2, prefill_chunk=3)
+    for rid, prompt in enumerate(prompts):
+        dev.submit(rid, prompt, features=DS.X_test[rid])
+    for _ in range(300):
+        before = len(dev.done)
+        dev.run(max_steps=3)
+        assert (dev.pool.ref >= 0).all()
+        if len(dev.done) == before and not dev.queue \
+                and all(c is None for c in dev._carry):
+            break
+    assert dev.done == done_ref
+    assert dev.dropped == ref.dropped
+
+
+def test_int8_paged_streams_shared_eq_unshared(engine):
+    """int8 pool: quantization is deterministic, so shared int8 pages
+    hold bit-identical content to self-written ones — int8-shared
+    streams equal int8-unshared streams (wave 2 = trie warm), host
+    equals device."""
+    prompts = _prefix_prompts(seed=7)
+    plain = DeviceContinuousBatcher(_paged_engine(engine, kv_int8=True),
+                                    eos_token=-1, max_tokens=4,
+                                    sync_every=3, prefill_chunk=4)
+    shared = DeviceContinuousBatcher(
+        _paged_engine(engine, kv_int8=True, share_prefix=True),
+        eos_token=-1, max_tokens=4, sync_every=3, prefill_chunk=4)
+    host = ContinuousBatcher(_paged_engine(engine, kv_int8=True),
+                             eos_token=-1, max_tokens=4)
+    for wave in ("a", "b"):
+        for rid, p in enumerate(prompts):
+            plain.submit((wave, rid), p, features=DS.X_test[rid])
+            shared.submit((wave, rid), p, features=DS.X_test[rid])
+            host.submit((wave, rid), p, features=DS.X_test[rid])
+        done_p = dict(plain.run(max_steps=600))
+        done_s = dict(shared.run(max_steps=600))
+        done_h = dict(host.run(max_steps=600))
+        assert done_s == done_p, f"int8 sharing diverged in wave {wave}"
+        assert done_h == done_p, f"int8 host/device diverged in wave {wave}"
+    assert shared.pool.stats["shared_tokens"] > 0
+
+
+def test_int8_paged_logits_within_tolerance(engine):
+    """int8 paged decode tracks fp paged decode within the dense int8
+    cache's tolerance (|logits_fp - logits_int8| < 0.05 * max|logits|,
+    the test_perf_features bound) over a multi-page sequence."""
+    import jax.numpy as jnp
+
+    eng, _ = engine
+    cfg = eng.cfg
+    kv_fp = M.init_paged_kv(cfg, 8, 8)
+    kv_i8 = M.init_paged_kv(cfg, 8, 8, kv_dtype="int8")
+    assert kv_i8[0].dtype == jnp.int8 and len(kv_i8) == 4
+    tbl = jnp.asarray(np.arange(8).reshape(2, 4))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(1, 97, (2, 20)), jnp.int32)
+    scale, diff = 0.0, 0.0
+    for t in range(20):
+        pos = jnp.full((2,), t, jnp.int32)
+        n = jnp.ones((2,), jnp.int32)
+        lf, kv_fp = M.paged_decode_step(eng.params, kv_fp, tbl, pos,
+                                        toks[:, t: t + 1], n, cfg)
+        l8, kv_i8 = M.paged_decode_step(eng.params, kv_i8, tbl, pos,
+                                        toks[:, t: t + 1], n, cfg)
+        scale = max(scale, float(jnp.max(jnp.abs(lf))))
+        diff = max(diff, float(jnp.max(jnp.abs(lf - l8))))
+    assert diff < 0.05 * scale, (diff, scale)
+
+
+def test_int8_pool_undercuts_fp_bytes(engine):
+    """The memory claim behind --kv-int8: at the same page count the
+    int8 pool (values + scale planes) costs strictly less than the bf16
+    pool, so a fixed byte budget admits more concurrent slots."""
+    eng, _ = engine
+    fp = M.init_paged_kv(eng.cfg, 8, 8)
+    i8 = M.init_paged_kv(eng.cfg, 8, 8, kv_dtype="int8")
+    fp_bytes = sum(x.nbytes for x in fp)
+    i8_bytes = sum(x.nbytes for x in i8)
+    assert i8_bytes < fp_bytes
+
+
+def test_submit_empty_prompt_rejected(engine):
+    """Satellite regression: an empty prompt raises a clear ValueError,
+    records an ``empty-prompt`` drop reason, and reserves nothing — on
+    the host batcher, the device batcher and the router."""
+    host = ContinuousBatcher(_paged_engine(engine), eos_token=-1,
+                             max_tokens=4)
+    with pytest.raises(ValueError, match="empty prompt"):
+        host.submit("e1", [])
+    assert host.drop_reasons["e1"] == "empty-prompt"
+    assert "e1" in host.dropped and not host.queue
+    assert host.page_free.all()  # zero-demand reservation never happened
+    dev = DeviceContinuousBatcher(_paged_engine(engine), eos_token=-1,
+                                  max_tokens=4)
+    with pytest.raises(ValueError, match="empty prompt"):
+        dev.submit("e2", np.array([], np.int32))
+    assert dev.drop_reasons["e2"] == "empty-prompt"
+    assert dev._pfree.all() and not dev.queue
 
 
 def test_dense_host_batcher_loops_prompt(engine):
