@@ -40,6 +40,18 @@ _SCHEMA = [
     (("new", "drop_reasons"), dict, True),
     (("speedup",), _NUM, True),
     (("parity",), bool, True),
+    # observability contract: serve_bench must emit the traced pass's
+    # per-phase latency percentiles + overhead/parity verdicts (a bench
+    # refactor that drops the metrics section is a hard failure)
+    (("metrics",), dict, True),
+    (("metrics", "tokens_per_s_traced"), _NUM, True),
+    (("metrics", "trace_overhead"), _NUM, True),
+    (("metrics", "trace_parity"), bool, True),
+    (("metrics", "ttft_ms"), dict, True),
+    (("metrics", "queue_wait_ms"), dict, True),
+    (("metrics", "decode_ms_per_token"), dict, True),
+    (("old", "compile_s"), _NUM, True),
+    (("new", "compile_s"), _NUM, True),
     (("prefill",), dict, True),
     (("prefill", "page_size"), int, True),
     (("prefill", "prefill_chunk"), int, True),
@@ -118,6 +130,26 @@ def check(new: dict, base: dict, timing_tol: float = 0.5) -> int:
     for path_name in ("old", "new"):
         if new.get(path_name, {}).get("completed", 0) <= 0:
             failures.append(f"{path_name} path completed zero requests")
+
+    mt = new.get("metrics", {})
+    if isinstance(mt, dict) and mt:
+        # observability gates are HARD: tracing must not change token
+        # streams, and its throughput cost is bounded at 2% (the traced
+        # pass shares the run's compile caches, so this ratio is far
+        # less runner-noisy than absolute tokens/s)
+        if not mt.get("trace_parity"):
+            failures.append("tracing changed the device batcher's token "
+                            "streams (trace_parity=false)")
+        overhead = mt.get("trace_overhead")
+        if overhead is not None and overhead < 0.98:
+            failures.append(
+                f"tracing overhead too high: traced throughput is "
+                f"{overhead:.3f}x untraced (gate: >= 0.98x)")
+        for phase in ("ttft_ms", "queue_wait_ms", "decode_ms_per_token"):
+            if mt.get(phase, {}).get("n", 0) <= 0:
+                failures.append(
+                    f"metrics section has no {phase} samples — the "
+                    f"traced pass completed nothing")
 
     prefill = new.get("prefill", {})
     if isinstance(prefill, dict) and prefill:
@@ -217,6 +249,8 @@ def check(new: dict, base: dict, timing_tol: float = 0.5) -> int:
           + f", prefill={new.get('prefill', {}).get('parity')}"
           + f", shared-prefix={sp.get('parity')}/"
           + f"int8={sp.get('int8_parity')}"
+          + f", trace={mt.get('trace_parity')}"
+          + f"@{mt.get('trace_overhead', 0):.3f}x"
           + f", {len(warnings)} timing warning(s)")
     return 0
 

@@ -73,14 +73,31 @@ def serve_table(path="BENCH_serve.json") -> List[str]:
     def ms(x):  # null when a wave completed zero requests
         return "—" if x is None else f"{x:.1f}"
 
-    rows = ["| path | tok/s | p50 ms | p99 ms | speedup | parity |",
-            "|---|---|---|---|---|---|"]
+    rows = ["| path | tok/s | p50 ms | p99 ms | compile s | speedup | parity |",
+            "|---|---|---|---|---|---|---|"]
     for name, d in (("host-driven", r["old"]), ("device-resident", r["new"])):
         tail = (f"{r['speedup']:.2f}× | {r['parity']}"
                 if name == "device-resident" else "1.00× | —")
+        comp = d.get("compile_s")
         rows.append(
             f"| {name} | {d['tokens_per_s']:.0f} | {ms(d['p50_ms'])} "
-            f"| {ms(d['p99_ms'])} | {tail} |")
+            f"| {ms(d['p99_ms'])} "
+            f"| {'—' if comp is None else f'{comp:.2f}'} | {tail} |")
+    mt = r.get("metrics")
+    if mt:
+        rows += ["", "Per-phase latency (traced device pass, "
+                     f"overhead {mt.get('trace_overhead', 0):.3f}× of "
+                     f"untraced, parity={mt.get('trace_parity')}):",
+                 "",
+                 "| phase | p50 | p99 | mean | n |",
+                 "|---|---|---|---|---|"]
+        for phase, label in (("queue_wait_ms", "queue wait ms"),
+                             ("ttft_ms", "TTFT ms"),
+                             ("decode_ms_per_token", "decode ms/token")):
+            d = mt.get(phase) or {}
+            rows.append(
+                f"| {label} | {ms(d.get('p50'))} | {ms(d.get('p99'))} "
+                f"| {ms(d.get('mean'))} | {d.get('n', 0)} |")
     return rows
 
 

@@ -98,6 +98,19 @@ def main(argv=None):
     ap.add_argument("--rebalance-margin", type=int, default=None,
                     help="router: queue-depth slack before a request "
                          "spills off its home shard (default: max_batch)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write request-lifecycle spans as Chrome "
+                         "trace-event JSON (open in chrome://tracing or "
+                         "Perfetto); continuous mode only")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="append a repro.obs metrics snapshot (JSONL): "
+                         "phase-latency histograms, drop counters, pool "
+                         "occupancy, router gauges")
+    ap.add_argument("--jax-profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the serve run "
+                         "into DIR (view with TensorBoard); pair with "
+                         "XLA_FLAGS=--xla_step_marker_location=1 to mark "
+                         "fused-step boundaries")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.mesh and not args.router:
@@ -134,6 +147,18 @@ def main(argv=None):
 
     # wrap around the test set so any --requests count is serveable
     feats = ds.X_test[np.arange(args.requests) % len(ds.X_test)]
+    tracer = metrics = None
+    if args.trace or args.metrics_out:
+        from ..obs import Metrics, Tracer
+        metrics = Metrics()
+        tracer = Tracer(metrics=metrics)
+    profiling = False
+    if args.jax_profile:
+        try:
+            jax.profiler.start_trace(args.jax_profile)
+            profiling = True
+        except Exception as e:  # profiler backend unavailable: still serve
+            print(f"jax-profile disabled ({e})")
     if args.continuous:
         if args.router:
             from .mesh import make_serve_mesh
@@ -143,7 +168,8 @@ def main(argv=None):
                               max_tokens=args.tokens,
                               sync_every=args.sync_every,
                               rebalance_margin=args.rebalance_margin,
-                              prefill_chunk=args.prefill_chunk)
+                              prefill_chunk=args.prefill_chunk,
+                              tracer=tracer, metrics=metrics)
             print(f"router: {cb.n_shards} shard(s) over mesh "
                   f"{dict(mesh.shape)}")
         else:
@@ -153,10 +179,12 @@ def main(argv=None):
                 cb = DeviceContinuousBatcher(
                     engine, eos_token=-1, max_tokens=args.tokens,
                     sync_every=args.sync_every,
-                    prefill_chunk=args.prefill_chunk)
+                    prefill_chunk=args.prefill_chunk,
+                    tracer=tracer, metrics=metrics)
             else:
                 cb = ContinuousBatcher(engine, eos_token=-1,
-                                       max_tokens=args.tokens)
+                                       max_tokens=args.tokens,
+                                       tracer=tracer, metrics=metrics)
         prefix = rng.integers(1, cfg.vocab_size,
                               args.shared_prefix_len).tolist()
         prompts = [
@@ -195,6 +223,27 @@ def main(argv=None):
                      else cb.pool.prefix_tokens_per_page())
             print(f"  prefix sharing: {ratio:.2f} live prefix tokens "
                   f"per pool page (1.0 = unshared)")
+        if profiling:
+            jax.profiler.stop_trace()
+            print(f"  jax profile -> {args.jax_profile}")
+        if tracer is not None:
+            probs = tracer.validate()
+            if probs:
+                print(f"  TRACE LIFECYCLE VIOLATIONS: {probs}")
+            pct = tracer.phase_percentiles()
+            for phase, st in pct.items():
+                if st["n"]:
+                    print(f"  {phase}: p50={st['p50']:.2f} "
+                          f"p99={st['p99']:.2f} (n={st['n']})")
+            if args.trace:
+                tracer.write_chrome_trace(args.trace)
+                print(f"  chrome trace -> {args.trace} "
+                      f"(open in chrome://tracing / Perfetto)")
+            if args.metrics_out:
+                metrics.write_jsonl(args.metrics_out, kind="serve",
+                                    requests=args.requests,
+                                    tokens_per_s=n_tok / dt)
+                print(f"  metrics -> {args.metrics_out}")
         return done
 
     # request stream: (flow features, prompt) through one generate() batch
@@ -214,6 +263,13 @@ def main(argv=None):
     print(f"generated {n_tok} tokens in {dt:.2f}s "
           f"({n_tok / dt:.1f} tok/s on CPU smoke config)")
     print("sample:", out[0][:8])
+    if profiling:
+        jax.profiler.stop_trace()
+        print(f"jax profile -> {args.jax_profile}")
+    if metrics is not None and args.metrics_out:
+        metrics.write_jsonl(args.metrics_out, kind="serve-batch",
+                            tokens_per_s=n_tok / dt)
+        print(f"metrics -> {args.metrics_out}")
     return out
 
 

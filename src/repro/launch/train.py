@@ -42,6 +42,18 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--resume", default=None, help="'auto' or step number")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write per-step spans as Chrome trace-event "
+                         "JSON (chrome://tracing / Perfetto)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="append a metrics snapshot per step (JSONL): "
+                         "step-time histogram, loss gauge, straggler "
+                         "medians, gradient compression ratio")
+    ap.add_argument("--jax-profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace into DIR (view "
+                         "with TensorBoard); pair with "
+                         "XLA_FLAGS=--xla_step_marker_location=1 to mark "
+                         "step boundaries")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -82,6 +94,24 @@ def main(argv=None):
     chash = config_hash((cfg, dataclasses.asdict(tcfg)[
         "microbatches"], args.seq, args.batch))
 
+    tracer = metrics = None
+    if args.trace or args.metrics_out:
+        from ..obs import Metrics, Tracer
+        metrics = Metrics()
+        tracer = Tracer(metrics=metrics)
+    if metrics is not None and tcfg.compress_grads:
+        # shape-only arithmetic: the ratio is a property of the pytree
+        from ..dist.compress import compression_ratio
+        metrics.gauge("train.compression_ratio").set(
+            compression_ratio(params))
+    profiling = False
+    if args.jax_profile:
+        try:
+            jax.profiler.start_trace(args.jax_profile)
+            profiling = True
+        except Exception as e:
+            print(f"jax-profile disabled ({e})")
+
     def do_ckpt():
         if mgr is not None:
             s = int(state["step"])
@@ -97,6 +127,21 @@ def main(argv=None):
         dt = time.perf_counter() - t0
         monitor.record(0, dt)
         losses.append(loss)
+        if tracer is not None:
+            tracer.span(f"step {step}", t0, t0 + dt, step=step, loss=loss)
+        if metrics is not None:
+            metrics.histogram("train.step_ms").observe(dt * 1e3)
+            metrics.gauge("train.loss").set(loss)
+            metrics.counter("train.steps").inc()
+            # straggler heartbeats: per-worker median step time + the
+            # flagged-worker count (single-process runs report worker 0)
+            for w, med in monitor.medians().items():
+                metrics.gauge(f"train.worker{w}.median_step_s").set(med)
+            metrics.gauge("train.stragglers").set(
+                len(monitor.stragglers()))
+            if args.metrics_out:
+                metrics.write_jsonl(args.metrics_out, kind="train",
+                                    step=step)
         print(f"step {step:5d} loss {loss:8.4f} {dt*1e3:8.1f} ms")
         if handler.preempted:
             # safe point: params/state are rebound, donated buffers gone
@@ -112,6 +157,17 @@ def main(argv=None):
             do_ckpt()
         mgr.wait()
     handler.uninstall()
+    if profiling:
+        jax.profiler.stop_trace()
+        print(f"jax profile -> {args.jax_profile}")
+    if tracer is not None and args.trace:
+        tracer.write_chrome_trace(args.trace)
+        print(f"chrome trace -> {args.trace}")
+    if metrics is not None:
+        h = metrics.histogram("train.step_ms")
+        if h.count:
+            print(f"step time p50={h.percentile(50):.1f}ms "
+                  f"p99={h.percentile(99):.1f}ms over {h.count} steps")
     if len(losses) >= 10:
         first, last = np.mean(losses[:5]), np.mean(losses[-5:])
         print(f"loss {first:.4f} -> {last:.4f} "

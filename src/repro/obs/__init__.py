@@ -1,0 +1,25 @@
+"""repro.obs — request-lifecycle tracing + metrics for serve/train.
+
+Three pieces, all zero-dependency (stdlib + numpy):
+
+* :class:`Tracer` (``obs.trace``) — request-lifecycle spans (submitted
+  -> admitted -> prefilling -> decoding -> drained, plus drops) with
+  host wall-clock timestamps AND device step counters, exported as
+  Chrome trace-event JSON;
+* :class:`Metrics` (``obs.metrics``) — counters, gauges and fixed
+  log-bucket histograms, snapshotted to JSONL;
+* instrumentation hooks in ``serve.engine`` (both batchers),
+  ``serve.router`` (queue depth, rebalances), ``serve.pages`` (pool
+  occupancy, prefix hits, COW) and the ``launch.serve`` /
+  ``launch.train`` drivers (``--trace`` / ``--metrics-out``).
+
+The instrumented-OFF hot path is unchanged: the device batcher only
+adds its trace leaves (and the jitted step only carries the extra
+scatters) when a tracer is attached, and token streams are bit-exact
+either way (gated by ``benchmarks/check_regression.py``).
+"""
+from .metrics import Counter, Gauge, Histogram, Metrics
+from .trace import RequestTrace, Tracer, step_time_interp
+
+__all__ = ["Counter", "Gauge", "Histogram", "Metrics", "RequestTrace",
+           "Tracer", "step_time_interp"]

@@ -53,6 +53,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import heapq
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -401,11 +402,15 @@ class ContinuousBatcher:
     """
 
     def __init__(self, engine: ServeEngine, eos_token: int = 0,
-                 max_tokens: int = 32, max_queue: Optional[int] = None):
+                 max_tokens: int = 32, max_queue: Optional[int] = None,
+                 tracer=None, metrics=None):
         self.engine = engine
         self.eos = eos_token
         self.max_tokens = max_tokens
         self.max_queue = max_queue
+        self.tracer = None
+        self.metrics = None
+        self.trace_shard = 0
         scfg = engine.scfg
         B = scfg.max_batch
         self.slot_free = np.ones(B, bool)
@@ -428,6 +433,19 @@ class ContinuousBatcher:
                                     scfg.n_pages, np.int32)
             self.pool = scfg.make_pool()
             self.slot_res: list = [None] * B
+        self.attach_obs(tracer, metrics)
+
+    def attach_obs(self, tracer=None, metrics=None) -> None:
+        """Attach a ``repro.obs`` Tracer/Metrics pair (None detaches).
+        Instrumentation is host-side bookkeeping only — the decode math
+        and token streams are identical with obs on or off."""
+        self.tracer = tracer
+        self.metrics = metrics
+        if tracer is not None and metrics is not None \
+                and tracer.metrics is None:
+            tracer.metrics = metrics
+        if metrics is not None and self.engine.scfg.paged:
+            self.pool.bind_metrics(metrics)
 
     @property
     def page_free(self) -> np.ndarray:
@@ -441,18 +459,31 @@ class ContinuousBatcher:
         bare int is accepted as a length-1 prompt); the host loop feeds
         it one token per step — the measured token-by-token baseline the
         chunked device path is benchmarked against."""
-        prompt = validate_prompt_or_drop(
-            self.engine.scfg, request_id, prompt_tokens, self.max_tokens,
-            self.dropped, self.drop_reasons, dense_ok=True)
+        try:
+            prompt = validate_prompt_or_drop(
+                self.engine.scfg, request_id, prompt_tokens,
+                self.max_tokens, self.dropped, self.drop_reasons,
+                dense_ok=True)
+        except ValueError:
+            if (self.tracer is not None
+                    and self.drop_reasons.get(request_id) == "empty-prompt"):
+                self.tracer.dropped(request_id, "empty-prompt")
+            raise
+        if self.tracer is not None:
+            self.tracer.submitted(request_id)
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
             self.dropped.append(request_id)
             self.drop_reasons[request_id] = "queue-full"
+            if self.tracer is not None:
+                self.tracer.dropped(request_id, "queue-full")
             return False
         if features is not None:
             keep = self.engine.admit(features[None])[0]
             if not keep:
                 self.dropped.append(request_id)
                 self.drop_reasons[request_id] = "gate-reject"
+                if self.tracer is not None:
+                    self.tracer.dropped(request_id, "gate-reject")
                 return False
         self.queue.append((request_id, prompt, features))
         return True
@@ -461,6 +492,7 @@ class ContinuousBatcher:
         scfg = self.engine.scfg
         if scfg.paged:
             self.pool.begin_wave()
+        now = time.perf_counter() if self.tracer is not None else 0.0
         for b in np.where(self.slot_free)[0]:
             if not self.queue:
                 break
@@ -487,6 +519,8 @@ class ContinuousBatcher:
             self.queue.popleft()
             self.slot_free[b] = False
             self.slot_req[b] = rid
+            if self.tracer is not None:
+                self.tracer.admitted(rid, t=now, shard=self.trace_shard)
             self.slot_prompt[b] = prompt
             # shared prefix tokens are already in the pool: skip them
             self.slot_ptr[b] = res.start if res is not None else 0
@@ -500,6 +534,12 @@ class ContinuousBatcher:
     def _evict(self, b, now):
         self.done[self.slot_req[b]] = self.slot_gen[b]
         self.done_at[self.slot_req[b]] = now
+        if self.tracer is not None:
+            # same `now` as done_at: tracer spans and drain timestamps
+            # agree exactly, not just in order
+            self.tracer.finished(self.slot_req[b],
+                                 n_tokens=len(self.slot_gen[b]), t=now)
+            self.tracer.drained(self.slot_req[b], t=now)
         self.slot_free[b] = True
         self.slot_req[b] = None
         if self.engine.scfg.paged:
@@ -553,6 +593,8 @@ class ContinuousBatcher:
                 if self.slot_ptr[b] < len(self.slot_prompt[b]):
                     continue  # mid-prompt prediction: discard
                 self.slot_gen[b].append(int(nxt[b]))
+                if self.tracer is not None and len(self.slot_gen[b]) == 1:
+                    self.tracer.first_token(self.slot_req[b], t=now)
                 if (len(self.slot_gen[b]) >= self.max_tokens
                         or int(nxt[b]) == self.eos):
                     self._evict(b, now)
@@ -595,7 +637,8 @@ class DeviceContinuousBatcher:
     def __init__(self, engine: ServeEngine, eos_token: int = 0,
                  max_tokens: int = 32, sync_every: int = 8,
                  pregate: bool = True, mesh=None,
-                 prefill_chunk: int = 1, max_queue: Optional[int] = None):
+                 prefill_chunk: int = 1, max_queue: Optional[int] = None,
+                 tracer=None, metrics=None):
         self.engine = engine
         self.eos = int(eos_token)
         self.max_tokens = int(max_tokens)
@@ -640,6 +683,27 @@ class DeviceContinuousBatcher:
         # table in paged mode)
         self._carry: List[Optional[dict]] = [None] * self._B
         self._run_k: Dict[Tuple, Callable] = {}
+        self.tracer = None
+        self.metrics = None
+        self.trace_shard = 0
+        # device step counter across run() calls: trace events carry
+        # absolute step numbers even on resumed/multi-wave schedules
+        self._steps_total = 0
+        self.attach_obs(tracer, metrics)
+
+    def attach_obs(self, tracer=None, metrics=None) -> None:
+        """Attach a ``repro.obs`` Tracer/Metrics pair (None detaches).
+        Tracing never touches the fused step: the traced and untraced
+        paths share the same jitted kernel (same cache entry), and
+        request lifecycles are reconstructed after each drain by
+        replaying the deterministic fill schedule on the host."""
+        self.tracer = tracer
+        self.metrics = metrics
+        if tracer is not None and metrics is not None \
+                and tracer.metrics is None:
+            tracer.metrics = metrics
+        if metrics is not None and self.paged:
+            self.pool.bind_metrics(metrics)
 
     def submit(self, request_id, prompt_tokens,
                features: Optional[np.ndarray] = None):
@@ -650,12 +714,22 @@ class DeviceContinuousBatcher:
         step; the dense path has one global position per step, so it
         accepts single-token prompts only.
         """
-        prompt = validate_prompt_or_drop(
-            self.engine.scfg, request_id, prompt_tokens, self.max_tokens,
-            self.dropped, self.drop_reasons)
+        try:
+            prompt = validate_prompt_or_drop(
+                self.engine.scfg, request_id, prompt_tokens,
+                self.max_tokens, self.dropped, self.drop_reasons)
+        except ValueError:
+            if (self.tracer is not None
+                    and self.drop_reasons.get(request_id) == "empty-prompt"):
+                self.tracer.dropped(request_id, "empty-prompt")
+            raise
+        if self.tracer is not None:
+            self.tracer.submitted(request_id)
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
             self.dropped.append(request_id)
             self.drop_reasons[request_id] = "queue-full"
+            if self.tracer is not None:
+                self.tracer.dropped(request_id, "queue-full")
             return False
         self.queue.append((
             request_id, prompt,
@@ -675,6 +749,11 @@ class DeviceContinuousBatcher:
 
     # ------------------------------------------------------------- step fn
     def _make_run_k(self, n_queue: int, n_out: int, n_feat: int) -> Callable:
+        # NOTE: tracing adds NOTHING here.  The traced path runs this
+        # same jitted step (same cache key, byte-identical HLO); request
+        # lifecycles are reconstructed on the host by replaying the
+        # deterministic FIFO fill schedule against the observed
+        # outcomes — see the `traced` block in run().
         cfg = self.engine.cfg
         gate_fn = self.engine.gate_fn
         drop = self.engine.scfg.gate_action_drop
@@ -742,16 +821,16 @@ class DeviceContinuousBatcher:
             return st, work
 
         def run_k(params, st, qtok, qreq, qfeat, qhasf, nq, k):
-            # k is traced: the host passes min(sync_every, steps left) so
-            # max_steps is honoured exactly (no chunk overshoot)
+            # k is traced: the host passes min(sync_every, steps
+            # left) so max_steps is honoured exactly (no overshoot)
             def cond(c):
                 i, _, alive = c
                 return (i < k) & alive
 
             def body(c):
                 i, st, _ = c
-                st, alive = one_step(params, qtok, qreq, qfeat, qhasf, nq,
-                                     st)
+                st, alive = one_step(params, qtok, qreq, qfeat,
+                                     qhasf, nq, st)
                 return i + 1, st, alive
 
             _, st, alive = jax.lax.while_loop(
@@ -935,8 +1014,8 @@ class DeviceContinuousBatcher:
             st = jax.lax.cond(work, decode_and_evict, lambda s: s, st)
             return st, work
 
-        def run_k(params, st, qtok, qlen, qreq, qfeat, qhasf, qsh, qdem,
-                  qstart, qcow, qreg, nq, k):
+        def run_k(params, st, qtok, qlen, qreq, qfeat, qhasf, qsh,
+                  qdem, qstart, qcow, qreg, nq, k):
             def cond(carry):
                 i, _, alive = carry
                 return (i < k) & alive
@@ -977,6 +1056,8 @@ class DeviceContinuousBatcher:
             if not keep[k]:
                 self.dropped.append(rid)
                 self.drop_reasons[rid] = "gate-reject"
+                if self.tracer is not None:
+                    self.tracer.dropped(rid, "gate-reject")
                 continue
             req_ids.append(rid)
             kept.append((rid, prompt, feat))
@@ -1074,6 +1155,7 @@ class DeviceContinuousBatcher:
                 pbuf[b, : len(c["prompt"])] = c["prompt"]
                 tbl[b] = c["tbl"]
                 reg[b] = c.get("reg", False)
+        traced = self.tracer is not None
         st = {
             "free": jnp.asarray(free),
             "req": jnp.asarray(req),
@@ -1087,6 +1169,7 @@ class DeviceContinuousBatcher:
             "out_done": jnp.zeros(R, bool),
             "out_drop": jnp.zeros(R, bool),
         }
+        pref0 = (self.pool.ref.copy() if self.paged and traced else None)
         if self.paged:
             st.update(
                 pages=self._pages,
@@ -1125,8 +1208,8 @@ class DeviceContinuousBatcher:
         if self.paged:
             key: Tuple = (Nq, R, n_feat, p_max)
             if key not in self._run_k:
-                self._run_k[key] = self._make_run_k_paged(Nq, R, n_feat,
-                                                          p_max)
+                self._run_k[key] = self._make_run_k_paged(
+                    Nq, R, n_feat, p_max)
         else:
             key = (Nq, R, n_feat)
             if key not in self._run_k:
@@ -1136,20 +1219,36 @@ class DeviceContinuousBatcher:
         seen = np.zeros(R, bool)
         remaining = max_steps
         alive = True
+        steps_run = 0
+        # (device step, host time) sync boundaries: in-flight events get
+        # interpolated host timestamps between them (traced runs only;
+        # the kernel call itself is identical either way)
+        boundaries = [(0, time.perf_counter())]
         while remaining > 0:
             k = min(self.sync_every, remaining)
             st, alive = run_k(eng.params, st, *args, jnp.int32(k))
-            remaining -= k
-            done_mask = np.asarray(st["out_done"])  # drain every K steps
+            done_mask = np.asarray(st["out_done"])  # drain every K
             now = time.perf_counter()
+            if traced:
+                # nominal cumulative count — only the final trip can
+                # exit early, and the tail boundary is clamped to the
+                # replayed schedule's actual last step below
+                steps_run += k
+                boundaries.append((steps_run, now))
+            remaining -= k
             for qi in np.where(done_mask & ~seen)[0]:
                 self.done_at[req_ids[qi]] = now
+                if traced:
+                    # the same `now` as done_at: drain timestamps and
+                    # tracer spans agree exactly
+                    self.tracer.drained(req_ids[qi], t=now)
             seen = done_mask
             if not bool(alive):
                 break
         if self.paged:
             self._pages = st["pages"]
             self.pool.ref[:] = np.asarray(st["pref"])
+            self.pool.observe_occupancy()
             # sharing stats: count exactly the entries the step admitted
             # this run (head = queue entries consumed); re-enqueued
             # entries are re-planned — and re-counted — only once they
@@ -1162,6 +1261,180 @@ class DeviceContinuousBatcher:
         out_len = np.asarray(st["out_len"])
         out_drop = np.asarray(st["out_drop"])
         out_tbl = (np.asarray(st["out_tbl"]) if self.paged else None)
+        if traced:
+            # Request lifecycles are *replayed*, not recorded.  The
+            # fused step's fill is a deterministic function of the FIFO
+            # queue, the slot-free schedule and (paged) the pool's
+            # free-page count, and an admitted slot advances every step
+            # until eviction — so given the observed outcomes (out_len,
+            # out_drop, done mask) the host reconstructs exactly:
+            #   admit:  next FIFO head lands when a slot is free (and,
+            #           paged, the pool covers its own-page demand);
+            #           a slot freed at step s refills at s + 1
+            #   first = admit + ceil((plen - start) / chunk) - 1
+            #           (dense: first = admit — fill and decode share
+            #           the step)
+            #   done  = first + n_tokens - 1 (a gate-dropped slot dies
+            #           on its admit step)
+            # The traced kernel IS the untraced kernel (same jit cache
+            # entry): tracing costs the device nothing.  Steps map to
+            # host times by interpolating between the sync boundaries;
+            # base makes them absolute across runs.
+            NP = eng.scfg.n_pages if self.paged else 0
+            Ck = self.prefill_chunk if self.paged else 1
+            s_admit: List = [None] * (C + n)  # fresh admits only
+            s_first: List = [None] * (C + n)
+            s_done: List = [None] * (C + n)
+            events: List[Tuple[int, int, int]] = []  # step, slots, pages
+            for qi in range(C):
+                # resumed slot, occupied from step 1: admit (and, once
+                # generating, first) were reported by the run that
+                # observed them
+                cst = carry[qi][1]
+                g0 = int(cst["gen"])
+                if self.paged and g0 == 0:  # resumed mid-prefill
+                    rem = len(cst["prompt"]) - int(cst["pos"])
+                    s_first[qi] = max(-(-rem // Ck), 1)
+                if seen[qi]:
+                    s_done[qi] = (s_first[qi] + int(out_len[qi]) - 1
+                                  if s_first[qi] is not None
+                                  else int(out_len[qi]) - g0)
+                elif out_drop[qi]:  # defensive: gate fires on step 1
+                    s_done[qi] = 1
+                if s_done[qi] is not None:
+                    pg = 0
+                    if self.paged:
+                        # pages released at evict = refcount exactly 1
+                        # at run start (shared pages keep the prefix
+                        # cache's standing hold, so they never free
+                        # mid-run); a completed reg slot keeps its
+                        # full-prompt positions for the cache
+                        tbl_c = np.asarray(cst["tbl"])
+                        own = (tbl_c < NP) & (
+                            pref0[np.clip(tbl_c, 0, NP - 1)] == 1)
+                        if cst.get("reg", False) and seen[qi]:
+                            nfp = len(cst["prompt"]) // eng.scfg.page_size
+                            own[:nfp] = False
+                        pg = int(own.sum())
+                    heapq.heappush(events, (s_done[qi] + 1, 1, pg))
+            free_slots = B - C
+            free_pages = int((pref0 == 0).sum()) if self.paged else 0
+            step, qp = 1, 0
+            while qp < n and step <= steps_run:
+                qi = C + qp
+                dem = int(qdem[qp]) if self.paged else 0
+                if free_slots < 1 or (self.paged and dem > free_pages):
+                    # blocked: resources only change at evictions
+                    if not events:
+                        break  # starved — the kernel idles out too
+                    s2, sl, pg = heapq.heappop(events)
+                    if s2 > steps_run:
+                        break
+                    step = max(step, s2)
+                    free_slots += sl
+                    free_pages += pg
+                    continue
+                s_admit[qi] = step
+                free_slots -= 1
+                free_pages -= dem
+                if out_drop[qi]:  # gate verdict evicts on admit step
+                    s_done[qi] = step
+                    heapq.heappush(events, (step + 1, 1, dem))
+                else:
+                    if self.paged:
+                        pre = -(-(int(qlen[qp]) - int(qstart[qp])) // Ck)
+                    else:
+                        pre = 1
+                    s_first[qi] = step + max(pre, 1) - 1
+                    if seen[qi]:
+                        s_done[qi] = s_first[qi] + int(out_len[qi]) - 1
+                        held = 0
+                        if self.paged and qreg[qp]:
+                            nsh = int((qsh[qp] < NP).sum())
+                            page = eng.scfg.page_size
+                            held = min(
+                                max(int(qlen[qp]) // page - nsh, 0), dem)
+                        heapq.heappush(
+                            events, (s_done[qi] + 1, 1, dem - held))
+                    # else: carried out in-flight — releases nothing
+                qp += 1
+            admitted = sum(1 for s in s_admit if s is not None)
+            head_dev = int(np.asarray(st["head"]))
+            if admitted != head_dev:
+                raise RuntimeError(
+                    "obs: schedule replay diverged from the device "
+                    f"fill (replayed {admitted} admits, kernel "
+                    f"consumed {head_dev}) — tracer spans would lie")
+            # actual executed steps: one past the last eviction (the
+            # step that found no work), capped at the nominal count;
+            # any in-flight slot means the loop ran every trip in full
+            dsteps = [s for s in s_done if s is not None]
+            in_flight = any(
+                (qi < C or s_admit[qi] is not None) and s_done[qi] is None
+                for qi in range(C + n))
+            actual = (steps_run if in_flight else
+                      min(steps_run, (max(dsteps) if dsteps else 0) + 1))
+            if boundaries[-1][0] > actual:
+                boundaries[-1] = (actual, boundaries[-1][1])
+            base = self._steps_total
+            self._steps_total += actual
+            gen_end = {}  # row -> generated count, for carried-out rows
+            if alive:
+                tf, trq, tg = jax.device_get(
+                    (st["free"], st["req"], st["gen"]))
+                for b in range(B):
+                    if not tf[b]:
+                        gen_end[int(trq[b])] = int(tg[b])
+            tracer, shard = self.tracer, self.trace_shard
+            rids = list(req_ids)
+
+            def emit():
+                # one vectorised step->time interpolation per event
+                # class (same clamped piecewise-linear map as
+                # obs.step_time_interp, minus 3N python-level calls)
+                b_s = np.array([s for s, _ in boundaries], float)
+                b_t = np.array([t for _, t in boundaries], float)
+
+                def interp_all(steps):
+                    return np.interp(
+                        [0 if s is None else s for s in steps], b_s, b_t)
+
+                t_adm = interp_all(s_admit)
+                t_fst = interp_all(s_first)
+                t_don = interp_all(s_done)
+                for qi in range(C + n):
+                    rid = rids[qi]
+                    if qi >= C:
+                        if s_admit[qi] is None:
+                            continue  # still queued: no events this run
+                        tracer.admitted(rid, t=float(t_adm[qi]),
+                                        step=base + s_admit[qi],
+                                        shard=shard)
+                        if out_drop[qi]:
+                            tracer.dropped(rid, "gate-reject",
+                                           t=float(t_don[qi]),
+                                           step=base + s_done[qi])
+                            continue
+                    if seen[qi]:
+                        if s_first[qi] is not None:
+                            tracer.first_token(rid, t=float(t_fst[qi]),
+                                               step=base + s_first[qi])
+                        tracer.finished(rid, n_tokens=int(out_len[qi]),
+                                        t=float(t_don[qi]),
+                                        step=base + s_done[qi])
+                    elif out_drop[qi]:
+                        if s_done[qi] is not None:
+                            tracer.dropped(rid, "gate-reject",
+                                           t=float(t_don[qi]),
+                                           step=base + s_done[qi])
+                    elif s_first[qi] is not None and gen_end.get(qi, 0) >= 1:
+                        # carried out mid-run, first token produced
+                        tracer.first_token(rid, t=float(t_fst[qi]),
+                                           step=base + s_first[qi])
+
+            # the replay above is cheap; the per-request emission is
+            # not, so it runs at export time, not on the serve path
+            self.tracer.defer(emit)
         for qi in range(C + n):
             if seen[qi]:
                 self.done[req_ids[qi]] = [

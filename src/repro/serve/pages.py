@@ -117,7 +117,30 @@ class PagePool:
         self._cached: "collections.OrderedDict[int, tuple]" = \
             collections.OrderedDict()
         self._planned = 0  # new cache keys promised this wave
+        self.metrics = None  # optional repro.obs.Metrics registry
+        self.metrics_prefix = "pool"
         self.reset_stats()
+
+    # ----------------------------------------------------------- metrics
+    def bind_metrics(self, metrics, prefix: str = "pool") -> None:
+        """Mirror allocator activity into a ``repro.obs.Metrics``
+        registry: occupancy gauges plus sharing counters (prefix hits,
+        COW copies).  The router binds each shard's pool under its own
+        prefix so gauges never collide across shards."""
+        self.metrics = metrics
+        self.metrics_prefix = prefix
+        self.observe_occupancy()
+
+    def observe_occupancy(self) -> None:
+        """Refresh the occupancy gauges from the current refcounts
+        (called after every reserve/release and after the device
+        batcher syncs ``pref`` back at drain)."""
+        if self.metrics is None:
+            return
+        p = self.metrics_prefix
+        self.metrics.gauge(f"{p}.free_pages").set(self.free_count())
+        self.metrics.gauge(f"{p}.cached_pages").set(self.n_cached)
+        self.metrics.gauge(f"{p}.live_refs").set(int(self.ref.sum()))
 
     # ------------------------------------------------------------- stats
     def reset_stats(self):
@@ -288,6 +311,18 @@ class PagePool:
         s["shared_tokens"] += plan.start
         s["cow_events"] += plan.cow_src is not None
         self._shared_seen.update(plan.shared)
+        if self.metrics is not None:
+            p = self.metrics_prefix
+            self.metrics.counter(f"{p}.plans").inc()
+            if plan.shared:
+                self.metrics.counter(f"{p}.prefix_hits").inc()
+                self.metrics.counter(
+                    f"{p}.prefix_hit_pages").inc(len(plan.shared))
+            if plan.start:
+                self.metrics.counter(
+                    f"{p}.shared_tokens").inc(plan.start)
+            if plan.cow_src is not None:
+                self.metrics.counter(f"{p}.cow_events").inc()
 
     # --------------------------------------------------------------- reserve
     def reserve(self, prompt: Sequence[int],
@@ -316,6 +351,7 @@ class PagePool:
         cow = None
         if plan.cow_src is not None:
             cow = (plan.cow_src, int(own[0]))
+        self.observe_occupancy()
         return Reservation(tbl=tbl, n_shared=len(plan.shared),
                            start=plan.start, cow=cow, plen=len(prompt),
                            reg=plan.reg)
@@ -333,6 +369,7 @@ class PagePool:
         if (self.ref < 0).any():
             raise AssertionError("page refcount went negative "
                                  f"(tbl={res.tbl})")
+        self.observe_occupancy()
 
     # ----------------------------------------------------- device-side hooks
     def register_completed(self, prompt: Sequence[int],
@@ -351,3 +388,4 @@ class PagePool:
         if (self.ref < 0).any():
             raise AssertionError("device drain drove a refcount negative "
                                  f"(pages={list(pages)})")
+        self.observe_occupancy()

@@ -61,7 +61,8 @@ class ShardedServe:
                  gate=None, gate_backend: str = "jnp", eos_token: int = 0,
                  max_tokens: int = 32, sync_every: int = 8,
                  rebalance_margin: Optional[int] = None,
-                 prefill_chunk: int = 1, max_queue: Optional[int] = None):
+                 prefill_chunk: int = 1, max_queue: Optional[int] = None,
+                 tracer=None, metrics=None):
         self.mesh = mesh
         self.submeshes = data_submeshes(mesh)
         self.n_shards = len(self.submeshes)
@@ -96,6 +97,25 @@ class ShardedServe:
         self._adm_dropped: List[Any] = []
         self.dropped: List[Any] = []
         self.drop_reasons: dict = {}
+        self.tracer = None
+        self.metrics = None
+        self.attach_obs(tracer, metrics)
+
+    def attach_obs(self, tracer=None, metrics=None) -> None:
+        """Attach ONE ``repro.obs`` Tracer/Metrics pair fleet-wide: each
+        shard batcher reports into it under its own shard id (Chrome
+        trace tid = shard), and each shard's page pool gets its own
+        gauge prefix so occupancy never collides across shards."""
+        self.tracer = tracer
+        self.metrics = metrics
+        if tracer is not None and metrics is not None \
+                and tracer.metrics is None:
+            tracer.metrics = metrics
+        for s, b in enumerate(self.batchers):
+            b.attach_obs(tracer, metrics)
+            b.trace_shard = s
+            if metrics is not None and self._scfg.paged:
+                b.pool.bind_metrics(metrics, prefix=f"pool.shard{s}")
 
     # ------------------------------------------------------------ admission
     def admit(self, features: np.ndarray) -> np.ndarray:
@@ -126,9 +146,20 @@ class ShardedServe:
         # instead of mid-route (where a failed request would vanish
         # from done/dropped accounting); empty prompts record their
         # drop reason before the ValueError surfaces
-        prompt = validate_prompt_or_drop(
-            self._scfg, request_id, prompt_tokens, self.max_tokens,
-            self._adm_dropped, self.drop_reasons)
+        try:
+            prompt = validate_prompt_or_drop(
+                self._scfg, request_id, prompt_tokens, self.max_tokens,
+                self._adm_dropped, self.drop_reasons)
+        except ValueError:
+            if (self.tracer is not None
+                    and self.drop_reasons.get(request_id) == "empty-prompt"):
+                self.tracer.dropped(request_id, "empty-prompt")
+            raise
+        if self.tracer is not None:
+            # router-side stamp: queue wait measured from the moment the
+            # fleet saw the request, not the shard hand-off (earliest
+            # submit wins in the tracer)
+            self.tracer.submitted(request_id)
         self.pending.append((
             request_id, prompt,
             None if features is None else np.asarray(features)))
@@ -166,14 +197,24 @@ class ShardedServe:
             if not keep[k]:
                 self._adm_dropped.append(rid)
                 self.drop_reasons[rid] = "gate-reject"
+                if self.tracer is not None:
+                    self.tracer.dropped(rid, "gate-reject")
                 continue
-            s = stable_shard(rid, self.n_shards)
+            home = s = stable_shard(rid, self.n_shards)
             if depth[s] - min(depth) > self.rebalance_margin:
                 s = int(np.argmin(depth))  # spill to the shallowest queue
+                if self.metrics is not None:
+                    self.metrics.counter("router.rebalanced").inc()
+                if self.tracer is not None:
+                    self.tracer.instant("rebalance", tid=s,
+                                        rid=repr(rid), home=home, to=s)
             if not self.batchers[s].submit(rid, prompt, features=feat):
                 continue  # shard rejected (queue-full): reason merged
             self.assigned[s].append(rid)
             depth[s] += 1
+        if self.metrics is not None:
+            for s, d in enumerate(self.queue_depths()):
+                self.metrics.gauge(f"router.queue_depth.shard{s}").set(d)
 
     # ----------------------------------------------------------------- run
     def _merge(self):

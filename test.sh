@@ -27,8 +27,13 @@ fail() { # phase-name exit-code
 }
 
 echo "[test.sh] phase: serve-bench-smoke"
+# --trace-out/--metrics-out exercise the traced pass end to end and
+# leave the Chrome trace + metrics JSONL next to the bench JSONs for
+# artifact upload
 PYTHONPATH=src:. python -m benchmarks.serve_bench --smoke --scenario decode \
     --out "$BENCH_DIR/BENCH_serve_smoke.json" \
+    --trace-out "$BENCH_DIR/serve_trace.json" \
+    --metrics-out "$BENCH_DIR/serve_metrics.jsonl" \
     || fail serve-bench-smoke 41
 
 # sharded serve rot-check: route over every fake device on one data
