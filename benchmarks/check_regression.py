@@ -74,6 +74,18 @@ _SCHEMA = [
     (("shared_prefix", "slots_fp_unshared"), int, True),
     (("shared_prefix", "slots_int8_shared"), int, True),
     (("shared_prefix", "int8_live_slots"), int, True),
+    # fault-tolerance contract: the faults scenario must account for
+    # every request and keep survivor/replayed streams bit-exact
+    (("faults",), dict, True),
+    (("faults", "recovered_fraction"), _NUM, True),
+    (("faults", "survivor_parity"), bool, True),
+    (("faults", "recovered_parity"), bool, True),
+    (("faults", "nofault_parity"), bool, True),
+    (("faults", "shards_crashed"), int, True),
+    (("faults", "quarantined"), int, True),
+    (("faults", "deadline_dropped"), int, True),
+    (("faults", "failed_over_completed"), int, True),
+    (("faults", "completed"), int, True),
     (("sharded",), dict, False),
     (("sharded", "parity"), bool, False),
     (("sharded", "paged_vs_dense_parity"), bool, False),
@@ -217,6 +229,40 @@ def check(new: dict, base: dict, timing_tol: float = 0.5) -> int:
                     f"shared-prefix {path_name} path completed zero "
                     f"requests")
 
+    fl = new.get("faults", {})
+    if isinstance(fl, dict) and fl:
+        # fault tolerance is a HARD gate throughout: recovery and
+        # stream parity are deterministic (seeded plan, paged cache),
+        # so none of this depends on runner timing
+        if fl.get("recovered_fraction") != 1.0:
+            failures.append(
+                f"faults scenario lost requests: recovered_fraction="
+                f"{fl.get('recovered_fraction')} (gate: == 1.0 — every "
+                f"submission must reach a terminal state)")
+        for flag, msg in (
+                ("survivor_parity", "failover perturbed untouched "
+                                    "survivor streams"),
+                ("recovered_parity", "failed-over replays diverged from "
+                                     "the fault-free reference"),
+                ("nofault_parity", "fault machinery changed the no-fault "
+                                   "streams (must be free when nothing "
+                                   "fails)")):
+            if not fl.get(flag):
+                failures.append(f"faults scenario: {msg} ({flag}=false)")
+        for count, msg in (
+                ("shards_crashed", "the seeded shard crash never fired"),
+                ("quarantined", "the poisoned sample was never "
+                                "quarantined"),
+                ("deadline_dropped", "zero-deadline requests were not "
+                                     "deadline-dropped"),
+                ("failed_over_completed", "no failed-over request "
+                                          "completed on a survivor"),
+                ("completed", "the faulted fleet completed zero "
+                              "requests")):
+            if fl.get(count, 0) <= 0:
+                failures.append(f"faults scenario: {msg} ({count}="
+                                f"{fl.get(count, 0)})")
+
     base_tps = base.get("new", {}).get("tokens_per_s")
     new_tps = new.get("new", {}).get("tokens_per_s")
     same_scale = new.get("requests") == base.get("requests")
@@ -251,6 +297,8 @@ def check(new: dict, base: dict, timing_tol: float = 0.5) -> int:
           + f"int8={sp.get('int8_parity')}"
           + f", trace={mt.get('trace_parity')}"
           + f"@{mt.get('trace_overhead', 0):.3f}x"
+          + f", faults={fl.get('recovered_fraction')}rec/"
+          + f"{fl.get('failed_over_completed')}moved"
           + f", {len(warnings)} timing warning(s)")
     return 0
 

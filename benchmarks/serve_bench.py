@@ -21,6 +21,14 @@ Three scenarios over the same ``repro.serve`` engines:
   bit-exact fp AND int8 parity vs the unshared pool), and the int8
   pool admits >= 2x the concurrent slots at fixed pool bytes (live-
   checked by a host batcher run).
+* **faults**: a 2-shard mesh-less ``ShardedServe`` under a seeded
+  ``FaultPlan`` (shard crash + poisoned sample) plus two
+  zero-deadline requests.  Hard gates: every request reaches a
+  terminal state (recovered fraction 1.0), survivor streams and
+  failed-over replays are bit-identical to a fault-free single-host
+  reference (paged cache -> a stream is a pure function of its
+  prompt), and the same fleet with no injector matches the reference
+  exactly ("failure machinery is free when nothing fails").
 
 ``BENCH_serve.json`` gets tokens/s + p50/p99 per-request latency for
 every path, per-request drop reasons (queue-full vs gate-reject), and
@@ -65,6 +73,11 @@ from .common import emit
 SYNC_EVERY = 32
 PAGE_SIZE = 16
 PREFILL_CHUNK = 8
+# faults scenario: short sync blocks => many drain boundaries per wave,
+# so the seeded crash/corruption drains land while work is in flight
+FAULT_SYNC = 4
+FAULT_SEED = 11
+FAULT_PROMPT_LEN = 8
 
 
 def _prompt(i: int, max_len: int):
@@ -578,6 +591,120 @@ def _bench_shared_prefix(cfg, params, gate, ds, kw):
     }
 
 
+def _bench_faults(cfg, params, gate, ds, kw):
+    """Fault-injection scenario: 2 mesh-less shards, paged cache,
+    seeded crash + poisoned sample + zero-deadline admissions.
+
+    The paged cache decodes every slot at its own positions, so a
+    request's token stream is a pure function of its prompt — a
+    fault-free single-host batcher is therefore a schedule-free
+    reference for EVERY stream, including requests replayed on a
+    survivor after their home shard died.  The acceptance gates
+    (mirrored as hard gates in check_regression):
+
+    * ``recovered_fraction`` == 1.0 — every submitted request reaches a
+      terminal state (done, or dropped with a recorded reason);
+    * ``survivor_parity`` — streams of requests the faults never
+      touched are bit-identical to the reference;
+    * ``recovered_parity`` — failed-over replays are bit-identical too
+      (replay restarts from the prompt, dedup by request id);
+    * ``nofault_parity`` — the same 2-shard fleet with NO injector
+      matches the reference exactly: the failure machinery is free
+      when nothing fails;
+    * at least one shard crashed, one slot was quarantined, one
+      request deadline-dropped, and one failed-over request completed
+      (otherwise the scenario silently stopped exercising anything).
+
+    The seeded plan is pinned to ``n_slots=1, max_drain=1``: the
+    corruption then always targets slot 0 (occupied whenever the shard
+    has work) at the first drain boundary past the fill, and the crash
+    lands after the victim shard's first turn — while its whole wave
+    is still in flight — so every gated event provably fires at both
+    the smoke and quick workload sizes.  No admission gate: fault
+    handling is the subject here, and gate verdicts have their own
+    scenarios.
+    """
+    from repro.serve.faults import FaultPlan
+    from repro.serve.router import ShardedServe
+
+    batch, cache_len = kw["batch"], kw["cache_len"]
+    max_tokens = kw["max_tokens"]
+    # >= 3 waves fleet-wide, so each shard still holds queued work when
+    # the crash/corruption drains arrive
+    requests = max(3 * batch, kw["requests"])
+    scfg_probe = ServeConfig(max_batch=batch, cache_len=cache_len,
+                             page_size=PAGE_SIZE)
+    pages = batch * page_demand(scfg_probe, FAULT_PROMPT_LEN, max_tokens)
+    scfg = ServeConfig(max_batch=batch, cache_len=cache_len,
+                       page_size=PAGE_SIZE, pages=pages)
+    max_steps = 100 * (max_tokens + FAULT_PROMPT_LEN)
+    prompts = {i: _prompt(i, FAULT_PROMPT_LEN) for i in range(requests)}
+
+    ref = DeviceContinuousBatcher(
+        ServeEngine(cfg, params, scfg), eos_token=-1,
+        max_tokens=max_tokens, sync_every=FAULT_SYNC,
+        prefill_chunk=PREFILL_CHUNK)
+    for i, p in prompts.items():
+        ref.submit(i, p)
+    ref_streams = dict(ref.run(max_steps=max_steps))
+
+    def fleet(injector=None):
+        return ShardedServe(cfg, params, scfg, None, eos_token=-1,
+                            max_tokens=max_tokens, sync_every=FAULT_SYNC,
+                            prefill_chunk=PREFILL_CHUNK, n_shards=2,
+                            max_retries=2, fault_injector=injector)
+
+    clean = fleet()
+    for i, p in prompts.items():
+        clean.submit(i, p)
+    clean_done = clean.run(max_steps=max_steps, drain_chunk=FAULT_SYNC)
+    nofault_parity = dict(clean_done) == ref_streams
+
+    plan = FaultPlan.seeded(FAULT_SEED, n_shards=2, n_slots=1,
+                            max_drain=1)
+    srv = fleet(plan.injector())
+    n_deadline = 2
+    t0 = time.perf_counter()
+    for i, p in prompts.items():
+        srv.submit(i, p)
+    for j in range(n_deadline):
+        srv.submit(requests + j, _prompt(j, FAULT_PROMPT_LEN),
+                   deadline_s=0.0)
+    # drain_chunk bounds each shard turn to one sync block, so the
+    # crash drain arrives while most of the dead shard's work is still
+    # queued or in flight — the interesting failover case
+    done = srv.run(max_steps=max_steps, drain_chunk=FAULT_SYNC)
+    wall = time.perf_counter() - t0
+
+    all_rids = set(range(requests + n_deadline))
+    accounted = (set(done) | set(srv.dropped)) & all_rids
+    reasons = collections.Counter(srv.drop_reasons[r] for r in srv.dropped)
+    moved = set(srv.retries)
+    return {
+        "n_shards": 2,
+        "seed": FAULT_SEED,
+        "sync_every": FAULT_SYNC,
+        "prompt_len": FAULT_PROMPT_LEN,
+        "plan": [repr(f) for f in plan],
+        "wall_s": wall,
+        "requests": requests + n_deadline,
+        "completed": len(done),
+        "dropped": len(srv.dropped),
+        "drop_reasons": dict(reasons),
+        "recovered_fraction": len(accounted) / len(all_rids),
+        "survivor_parity": all(done[r] == ref_streams.get(r)
+                               for r in done if r not in moved),
+        "recovered_parity": all(done[r] == ref_streams.get(r)
+                                for r in moved if r in done),
+        "nofault_parity": nofault_parity,
+        "shards_crashed": len(srv.failover_log),
+        "requests_lost": sum(n for _, _, n in srv.failover_log),
+        "failed_over_completed": sum(1 for r in moved if r in done),
+        "quarantined": int(reasons.get("quarantined", 0)),
+        "deadline_dropped": int(reasons.get("deadline", 0)),
+    }
+
+
 def main(quick: bool = True, smoke: bool = False, mesh_spec: str = None,
          scenario: str = "all", out: str = "BENCH_serve.json",
          trace_out: str = None, metrics_out: str = None) -> dict:
@@ -619,6 +746,10 @@ def main(quick: bool = True, smoke: bool = False, mesh_spec: str = None,
                    repeats=repeats, batch=batch, cache_len=cache_len)
         result["shared_prefix"] = _bench_shared_prefix(cfg, params, gate,
                                                        ds, skw)
+    if scenario in ("all", "faults"):
+        fkw = dict(requests=requests, max_tokens=max_tokens,
+                   batch=batch, cache_len=cache_len)
+        result["faults"] = _bench_faults(cfg, params, gate, ds, fkw)
 
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
@@ -726,6 +857,35 @@ def main(quick: bool = True, smoke: bool = False, mesh_spec: str = None,
             "live run never reached the computed concurrent-slot count")
         assert sp["int8_live_completed"] == sp["slots_int8_shared"], (
             "int8+shared live run dropped requests")
+    if scenario in ("all", "faults"):
+        fl = result["faults"]
+        emit("serve/faults-2shard", fl["wall_s"] * 1e6,
+             f"recovered={fl['recovered_fraction']:.2f};"
+             f"crashed={fl['shards_crashed']};"
+             f"quarantined={fl['quarantined']};"
+             f"deadline={fl['deadline_dropped']};"
+             f"failover_ok={fl['failed_over_completed']};"
+             f"survivor_parity={fl['survivor_parity']};"
+             f"recovered_parity={fl['recovered_parity']};"
+             f"nofault_parity={fl['nofault_parity']}")
+        assert fl["recovered_fraction"] == 1.0, (
+            f"faults scenario lost requests: only "
+            f"{fl['recovered_fraction']:.2f} of submissions reached a "
+            f"terminal state")
+        assert fl["nofault_parity"], (
+            "fault machinery changed the no-fault streams — it must be "
+            "free when nothing fails")
+        assert fl["survivor_parity"], (
+            "failover perturbed untouched survivor streams")
+        assert fl["recovered_parity"], (
+            "failed-over replays diverged from the fault-free reference")
+        assert fl["shards_crashed"] >= 1, "the seeded crash never fired"
+        assert fl["quarantined"] >= 1, (
+            "the poisoned sample was never quarantined")
+        assert fl["deadline_dropped"] >= 1, (
+            "zero-deadline requests were not deadline-dropped")
+        assert fl["failed_over_completed"] >= 1, (
+            "no failed-over request completed on a survivor")
     return result
 
 
@@ -738,7 +898,8 @@ if __name__ == "__main__":
                     help="also run the sharded serve path on this "
                          "DATAxMODEL mesh (e.g. 1x8) or 'auto'")
     ap.add_argument("--scenario", default="all",
-                    choices=["all", "decode", "prefill", "shared-prefix"],
+                    choices=["all", "decode", "prefill", "shared-prefix",
+                             "faults"],
                     help="which serve scenario(s) to run")
     ap.add_argument("--out", default=None,
                     help="output json (default BENCH_serve.json for "

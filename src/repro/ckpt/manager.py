@@ -115,6 +115,22 @@ class CheckpointManager:
         steps = self.list_steps()
         return steps[-1] if steps else None
 
+    def restore_flat(self, step: int) -> Dict[str, np.ndarray]:
+        """Restore the flat ``{path: array}`` view without a target tree.
+
+        ``restore`` needs a structure-and-shape-matched template, which
+        callers with variable-shape payloads (the serve queue snapshot a
+        preemption writes) cannot build up front; the flat view is the
+        manifest's own keying, shapes included.
+        """
+        d = self._final_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        if manifest["step"] != step:
+            raise ValueError("manifest/step mismatch")
+        data = np.load(os.path.join(d, "arrays.npz"))
+        return {k: data[k] for k in manifest["leaves"]}
+
     def restore(self, step: int, target_tree: Any,
                 shardings: Any = None) -> Any:
         """Restore into the structure of ``target_tree``; reshard if given.

@@ -38,6 +38,10 @@ class StragglerMonitor:
         self.threshold = threshold
         self._times: List[deque] = [deque(maxlen=window)
                                     for _ in range(n_workers)]
+        # consecutive rounds each worker has been flagged (note_round):
+        # eviction decisions key off *persistent* violation, so one noisy
+        # step never costs a worker its shard
+        self._strikes: List[int] = [0] * n_workers
 
     def record(self, worker: int, seconds: float) -> None:
         self._times[worker].append(float(seconds))
@@ -55,6 +59,23 @@ class StragglerMonitor:
         fleet = statistics.median(meds.values())
         return [w for w, m in sorted(meds.items())
                 if m > self.threshold * fleet]
+
+    def note_round(self) -> List[int]:
+        """Close one observation round: flagged workers gain a strike,
+        clean workers reset to zero.  Returns this round's stragglers."""
+        flagged = set(self.stragglers())
+        for w in range(self.n_workers):
+            self._strikes[w] = self._strikes[w] + 1 if w in flagged else 0
+        return sorted(flagged)
+
+    def strikes(self, worker: int) -> int:
+        return self._strikes[worker]
+
+    def persistent(self, min_strikes: int) -> List[int]:
+        """Workers flagged in >= ``min_strikes`` *consecutive* rounds —
+        the router's evict-this-shard signal."""
+        return [w for w in range(self.n_workers)
+                if self._strikes[w] >= min_strikes]
 
 
 def replan_data_axis(n_healthy_hosts: int, model_parallel: int,

@@ -106,6 +106,30 @@ def main(argv=None):
                     help="append a repro.obs metrics snapshot (JSONL): "
                          "phase-latency histograms, drop counters, pool "
                          "occupancy, router gauges")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline budget in seconds "
+                         "(queue wait + decode + failover hops); "
+                         "expired requests drop with reason 'deadline' "
+                         "at admission or the next drain boundary")
+    ap.add_argument("--max-retries", type=int, default=1,
+                    help="failure retry budget: queue-full submissions "
+                         "back off and re-attempt this many times, and "
+                         "a failed shard's requests take at most this "
+                         "many failover hops before dropping "
+                         "'shard-failed'")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="deterministic fault injection, e.g. "
+                         "'crash:1@2,nan:0@1' or 'seed:7:2' "
+                         "(serve.faults.FaultPlan.parse grammar); "
+                         "applied at host drain boundaries only — the "
+                         "jitted step never sees it")
+    ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
+                    help="graceful degradation: install a SIGTERM "
+                         "handler that stops admitting, drains "
+                         "in-flight work and snapshots the un-served "
+                         "queue here (CheckpointManager); on launch, "
+                         "an existing snapshot warm-restarts into the "
+                         "fresh batcher")
     ap.add_argument("--jax-profile", default=None, metavar="DIR",
                     help="capture a jax.profiler trace of the serve run "
                          "into DIR (view with TensorBoard); pair with "
@@ -159,7 +183,16 @@ def main(argv=None):
             profiling = True
         except Exception as e:  # profiler backend unavailable: still serve
             print(f"jax-profile disabled ({e})")
+    injector = None
+    if args.fault_plan:
+        from ..serve.faults import FaultPlan
+        plan = FaultPlan.parse(args.fault_plan)
+        injector = plan.injector()
+        print(f"fault plan: {len(plan)} fault(s) armed "
+              f"({args.fault_plan})")
     if args.continuous:
+        ft = dict(max_retries=args.max_retries,
+                  deadline_s=args.deadline_s, fault_injector=injector)
         if args.router:
             from .mesh import make_serve_mesh
             mesh = make_serve_mesh(args.mesh or "auto")
@@ -169,7 +202,7 @@ def main(argv=None):
                               sync_every=args.sync_every,
                               rebalance_margin=args.rebalance_margin,
                               prefill_chunk=args.prefill_chunk,
-                              tracer=tracer, metrics=metrics)
+                              tracer=tracer, metrics=metrics, **ft)
             print(f"router: {cb.n_shards} shard(s) over mesh "
                   f"{dict(mesh.shape)}")
         else:
@@ -180,11 +213,27 @@ def main(argv=None):
                     engine, eos_token=-1, max_tokens=args.tokens,
                     sync_every=args.sync_every,
                     prefill_chunk=args.prefill_chunk,
-                    tracer=tracer, metrics=metrics)
+                    tracer=tracer, metrics=metrics, **ft)
             else:
                 cb = ContinuousBatcher(engine, eos_token=-1,
                                        max_tokens=args.tokens,
-                                       tracer=tracer, metrics=metrics)
+                                       tracer=tracer, metrics=metrics, **ft)
+        handler = None
+        if args.snapshot_dir:
+            from ..ckpt import CheckpointManager
+            from ..dist.stragglers import PreemptionHandler
+            from ..serve.faults import preempt_snapshot, warm_restart
+
+            manager = CheckpointManager(args.snapshot_dir)
+            restored = warm_restart(cb, manager)
+            if restored:
+                print(f"warm restart: {restored} un-served request(s) "
+                      f"restored from {args.snapshot_dir}")
+            # SIGTERM -> flag only; the serve loop below checks it at
+            # the next wave boundary (stop admitting, drain in-flight,
+            # snapshot whatever never reached a slot)
+            handler = PreemptionHandler(
+                lambda: preempt_snapshot(cb, manager)).install()
         prefix = rng.integers(1, cfg.vocab_size,
                               args.shared_prefix_len).tolist()
         prompts = [
@@ -205,9 +254,17 @@ def main(argv=None):
         for rid in range(split):
             cb.submit(rid, prompts[rid], features=feats[rid])
         cb.run(max_steps=budget)
-        for rid in range(split, args.requests):
-            cb.submit(rid, prompts[rid], features=feats[rid])
+        if handler is None or not handler.preempted:
+            # graceful degradation: a pending SIGTERM stops admission
+            # at this wave boundary — in-flight work still drains below
+            for rid in range(split, args.requests):
+                cb.submit(rid, prompts[rid], features=feats[rid])
         done = cb.run(max_steps=budget)
+        if handler is not None:
+            if handler.drain():
+                print(f"preempted: un-served queue snapshotted to "
+                      f"{args.snapshot_dir} (warm restart restores it)")
+            handler.uninstall()
         dt = time.perf_counter() - t0
         n_tok = sum(len(v) for v in done.values())
         tag = "router" if args.router else args.batcher

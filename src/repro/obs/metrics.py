@@ -140,6 +140,24 @@ class Histogram:
             seen += c
         return self.max
 
+    def merge(self, other: "Histogram") -> "Histogram":
+        """Fold ``other``'s observations in (exact: the fixed geometry
+        means bucket counts simply add).  Geometries must match."""
+        if self.edges != other.edges:
+            raise ValueError("histogram geometries differ; merge would "
+                             "re-bucket and stop being exact")
+        for i, c in enumerate(other.counts):
+            self.counts[i] += c
+        self.count += other.count
+        self.sum += other.sum
+        for v in (other.min,):
+            if v is not None:
+                self.min = v if self.min is None else min(self.min, v)
+        for v in (other.max,):
+            if v is not None:
+                self.max = v if self.max is None else max(self.max, v)
+        return self
+
     def to_dict(self) -> dict:
         return {
             "count": self.count,
@@ -188,6 +206,28 @@ class Metrics:
             h.count = 0
             h.sum = 0.0
             h.min = h.max = None
+
+    def merge(self, other: "Metrics") -> "Metrics":
+        """Fold another registry in (cross-shard/process aggregation):
+        counters add, gauges last-write-wins (``other`` wins when set),
+        histograms merge exactly via their shared bucket geometry."""
+        for k, c in other._counters.items():
+            self.counter(k).value += c.value
+        for k, g in other._gauges.items():
+            if g.value is not None:
+                self.gauge(k).set(g.value)
+        for k, h in other._hists.items():
+            mine = self._hists.get(k)
+            if mine is None:
+                mine = self._hists[k] = Histogram()
+                if mine.edges != h.edges:  # non-default geometry source
+                    mine.edges = list(h.edges)
+                    mine.counts = [0] * (len(h.edges) + 1)
+                    mine._lo = mine.edges[0]
+                    mine._per_over_span = (len(mine.edges) - 1) / math.log10(
+                        mine.edges[-1] / mine._lo)
+            mine.merge(h)
+        return self
 
     # --------------------------------------------------------- snapshots
     def snapshot(self) -> dict:

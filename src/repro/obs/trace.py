@@ -90,6 +90,8 @@ class RequestTrace:
     n_tokens: int = 0
     terminal: Optional[str] = None  # "done" | "drop"
     drop_reason: Optional[str] = None
+    retries: int = 0    # queue-full backoff re-attempts
+    failovers: int = 0  # shard-failure re-routes (replayed from prompt)
 
     # ------------------------------------------------------------ derived
     def phase_spans(self) -> List[tuple]:
@@ -167,6 +169,8 @@ class Tracer:
             self._h_wait = m.histogram("serve.queue_wait_ms")
             self._h_ttft = m.histogram("serve.ttft_ms")
             self._h_dec = m.histogram("serve.decode_ms_per_token")
+            self._c_retry = m.counter("serve.requests_retried")
+            self._c_fail = m.counter("serve.requests_failed_over")
 
     def reset(self) -> None:
         """Drop recorded data, keep the epoch (bench: call after warmup
@@ -262,6 +266,47 @@ class Tracer:
         if self._metrics is not None:
             self._c_drop.inc()
             self._metrics.counter(f"serve.drop.{reason}").inc()
+
+    # ------------------------------------------------- failure transitions
+    def retried(self, rid, attempt: int = 1, t: Optional[float] = None,
+                shard: int = 0) -> None:
+        """Queue-full backoff re-attempt landed the request back in the
+        queue (NOT terminal — the request is alive again)."""
+        r = self._req(rid)
+        r.retries += 1
+        t = self.clock() if t is None else t
+        self.instant("retried", t=t, tid=shard, rid=repr(rid),
+                     attempt=attempt)
+        if self._metrics is not None:
+            self._c_retry.inc()
+
+    def failed_over(self, rid, frm: int, to: int,
+                    t: Optional[float] = None) -> None:
+        """A dead shard's request was re-routed (replayed from its
+        prompt) to a survivor — lifecycle continues on the new shard."""
+        r = self._req(rid)
+        r.failovers += 1
+        t = self.clock() if t is None else t
+        self.instant("failed-over", t=t, tid=to, rid=repr(rid),
+                     frm=frm, to=to)
+        if self._metrics is not None:
+            self._c_fail.inc()
+
+    def deadline_dropped(self, rid, t: Optional[float] = None,
+                         step: Optional[int] = None, shard: int = 0) -> None:
+        """Deadline exceeded: the slot/queue entry was evicted.  Terminal
+        (a ``deadline`` drop) plus a visible instant for the timeline."""
+        t = self.clock() if t is None else t
+        self.instant("deadline-dropped", t=t, tid=shard, rid=repr(rid))
+        self.dropped(rid, "deadline", t=t, step=step)
+
+    def quarantined(self, rid, t: Optional[float] = None,
+                    step: Optional[int] = None, shard: int = 0) -> None:
+        """Poisoned sample detected: exactly this slot was evicted.
+        Terminal (a ``quarantined`` drop) plus a timeline instant."""
+        t = self.clock() if t is None else t
+        self.instant("quarantined", t=t, tid=shard, rid=repr(rid))
+        self.dropped(rid, "quarantined", t=t, step=step)
 
     # ----------------------------------------------------- freeform events
     def span(self, name: str, t0: float, t1: float, tid: int = 0,

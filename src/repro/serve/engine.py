@@ -45,9 +45,18 @@ multipliers on top of paging:
   (quantize on write, dequant in the gathered attention), ~2x pool
   tokens per byte at the dense int8 cache's round-trip bound.
 
-Dropped requests record a reason in ``drop_reasons``: ``gate-reject``
-(Planter verdict), ``queue-full`` (bounded ``max_queue``) or
-``empty-prompt`` (zero-token submit, which also raises).
+Dropped requests record a reason in ``drop_reasons`` and a wall-clock
+stamp in ``dropped_at``: ``gate-reject`` (Planter verdict),
+``queue-full`` (bounded ``max_queue``, after ``max_retries`` backoff
+re-attempts when enabled), ``empty-prompt`` (zero-token submit, which
+also raises), ``deadline`` (per-request ``deadline_s`` exceeded — checked
+at admission and every drain boundary; mid-flight expiry evicts the slot
+and reclaims its pages) and ``quarantined`` (the per-drain finite check
+caught a poisoned sample in that slot — only the offending slot is
+evicted).  Failure injection (``serve.faults.FaultInjector``) applies at
+host drain boundaries ONLY: the jitted kernel is byte-identical with or
+without a fault plan attached, and the fault path costs nothing when no
+fault is active.
 """
 from __future__ import annotations
 
@@ -65,6 +74,7 @@ from ..arch import model as M
 from ..arch.config import ArchConfig
 from ..core.pipeline import MappedModel
 from ..dist import sharding as SH
+from .faults import PoolExhaust
 from .pages import PagePool
 from .pages import page_demand as _page_demand
 
@@ -181,7 +191,8 @@ def validate_prompt(scfg: ServeConfig, prompt_tokens, max_tokens: int,
 def validate_prompt_or_drop(scfg: ServeConfig, request_id, prompt_tokens,
                             max_tokens: int, dropped: list,
                             drop_reasons: dict,
-                            dense_ok: bool = False) -> list:
+                            dense_ok: bool = False,
+                            dropped_at: Optional[dict] = None) -> list:
     """``validate_prompt`` with drop bookkeeping: an empty prompt is
     recorded in ``drop_reasons`` (reason ``empty-prompt``) before the
     ValueError surfaces, so the rejected request never silently vanishes
@@ -192,7 +203,80 @@ def validate_prompt_or_drop(scfg: ServeConfig, request_id, prompt_tokens,
         if "empty prompt" in str(e):
             dropped.append(request_id)
             drop_reasons[request_id] = "empty-prompt"
+            if dropped_at is not None:
+                dropped_at[request_id] = time.perf_counter()
         raise
+
+
+def _drop_request(b, rid, reason: str, now: Optional[float] = None,
+                  trace: bool = True) -> None:
+    """Shared terminal-drop bookkeeping for both batchers: reason +
+    wall-clock stamp (``dropped_at`` rides next to ``done_at``), deadline
+    cleanup, tracer/metrics emission.  ``trace=False`` defers emission to
+    the caller — the traced device path emits from the schedule replay so
+    step numbers and interpolated times stay consistent."""
+    now = b._clock() if now is None else now
+    b.dropped.append(rid)
+    b.drop_reasons[rid] = reason
+    b.dropped_at[rid] = now
+    b.deadline.pop(rid, None)
+    if trace and b.tracer is not None:
+        if reason == "deadline":
+            b.tracer.deadline_dropped(rid, t=now, shard=b.trace_shard)
+        elif reason == "quarantined":
+            b.tracer.quarantined(rid, t=now, shard=b.trace_shard)
+        else:
+            b.tracer.dropped(rid, reason, t=now)
+
+
+def _defer_full(b, rid, prompt, feat, dabs) -> None:
+    """Queue-full with retries enabled: park the request in the backoff
+    queue instead of dropping.  Attempts are scheduled in *drain
+    boundaries* (not wall-clock), so backoff is deterministic under test
+    and scales with actual serving progress."""
+    b._retry_q.append([b._drains + b.retry_backoff, 1, rid, prompt,
+                       feat, dabs])
+    if b.metrics is not None:
+        b.metrics.counter("serve.queue_full_deferred").inc()
+
+
+def _service_retries(b) -> None:
+    """Re-attempt deferred submissions whose backoff expired.  Entry
+    layout: ``[due_drain, attempt, rid, prompt, feat, deadline_abs]``.
+    On a still-full queue the entry reschedules with exponential backoff
+    (``retry_backoff * 2**attempt`` drains) until ``max_retries`` is
+    exhausted -> ``queue-full`` drop; an expired deadline drops as
+    ``deadline`` without consuming an attempt."""
+    if not b._retry_q:
+        return
+    now = b._clock()
+    rest: collections.deque = collections.deque()
+    while b._retry_q:
+        ent = b._retry_q.popleft()
+        due, attempt, rid, prompt, feat, dabs = ent
+        if dabs is not None and now > dabs:
+            _drop_request(b, rid, "deadline", now)
+            continue
+        if due > b._drains:
+            rest.append(ent)
+            continue
+        if b.max_queue is None or len(b.queue) < b.max_queue:
+            if dabs is not None:
+                b.deadline[rid] = dabs
+            b.queue.append((rid, prompt, feat))
+            if b.tracer is not None:
+                b.tracer.retried(rid, attempt=attempt, t=now,
+                                 shard=b.trace_shard)
+            elif b.metrics is not None:
+                b.metrics.counter("serve.requests_retried").inc()
+            continue
+        if attempt >= b.max_retries:
+            _drop_request(b, rid, "queue-full", now)
+            continue
+        ent[0] = b._drains + b.retry_backoff * (1 << attempt)
+        ent[1] = attempt + 1
+        rest.append(ent)
+    b._retry_q = rest
 
 
 class ServeEngine:
@@ -403,7 +487,11 @@ class ContinuousBatcher:
 
     def __init__(self, engine: ServeEngine, eos_token: int = 0,
                  max_tokens: int = 32, max_queue: Optional[int] = None,
-                 tracer=None, metrics=None):
+                 tracer=None, metrics=None, max_retries: int = 0,
+                 retry_backoff: int = 1,
+                 deadline_s: Optional[float] = None,
+                 fault_injector=None,
+                 clock: Callable[[], float] = time.perf_counter):
         self.engine = engine
         self.eos = eos_token
         self.max_tokens = max_tokens
@@ -411,6 +499,18 @@ class ContinuousBatcher:
         self.tracer = None
         self.metrics = None
         self.trace_shard = 0
+        # failure handling: queue-full retry budget (drain-boundary
+        # backoff), default deadline, drain-boundary fault injector and
+        # an injectable clock (tests pin deadlines deterministically)
+        self.max_retries = int(max_retries)
+        self.retry_backoff = max(1, int(retry_backoff))
+        self.default_deadline_s = deadline_s
+        self.injector = fault_injector
+        self._clock = clock
+        self._drains = 0
+        self._retry_q: collections.deque = collections.deque()
+        self._exh_holds: List[list] = []
+        self._vocab = engine.cfg.vocab_size
         scfg = engine.scfg
         B = scfg.max_batch
         self.slot_free = np.ones(B, bool)
@@ -424,6 +524,8 @@ class ContinuousBatcher:
         self.done_at: dict = {}  # request_id -> perf_counter at completion
         self.dropped: list = []
         self.drop_reasons: dict = {}  # request_id -> why it was dropped
+        self.dropped_at: dict = {}  # request_id -> perf_counter at drop
+        self.deadline: dict = {}  # request_id -> absolute deadline
         self.max_live = 0  # peak concurrent slots (pool-sizing evidence)
         if scfg.paged:
             # per-slot position offsets + block table; allocation,
@@ -454,16 +556,20 @@ class ContinuousBatcher:
         return self.pool.ref == 0
 
     def submit(self, request_id, prompt_tokens,
-               features: Optional[np.ndarray] = None):
+               features: Optional[np.ndarray] = None,
+               deadline_s: Optional[float] = None):
         """Enqueue a request.  ``prompt_tokens`` is a token sequence (a
         bare int is accepted as a length-1 prompt); the host loop feeds
         it one token per step — the measured token-by-token baseline the
-        chunked device path is benchmarked against."""
+        chunked device path is benchmarked against.  ``deadline_s``
+        (falls back to the batcher default) bounds queue + serve time:
+        an already-expired budget drops at admission, a mid-flight
+        expiry evicts the slot at the next drain boundary."""
         try:
             prompt = validate_prompt_or_drop(
                 self.engine.scfg, request_id, prompt_tokens,
                 self.max_tokens, self.dropped, self.drop_reasons,
-                dense_ok=True)
+                dense_ok=True, dropped_at=self.dropped_at)
         except ValueError:
             if (self.tracer is not None
                     and self.drop_reasons.get(request_id) == "empty-prompt"):
@@ -471,20 +577,26 @@ class ContinuousBatcher:
             raise
         if self.tracer is not None:
             self.tracer.submitted(request_id)
+        ddl = deadline_s if deadline_s is not None else self.default_deadline_s
+        dabs = None
+        if ddl is not None:
+            if ddl <= 0:
+                _drop_request(self, request_id, "deadline")
+                return False
+            dabs = self._clock() + float(ddl)
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
-            self.dropped.append(request_id)
-            self.drop_reasons[request_id] = "queue-full"
-            if self.tracer is not None:
-                self.tracer.dropped(request_id, "queue-full")
+            if self.max_retries > 0:
+                _defer_full(self, request_id, prompt, features, dabs)
+                return True
+            _drop_request(self, request_id, "queue-full")
             return False
         if features is not None:
             keep = self.engine.admit(features[None])[0]
             if not keep:
-                self.dropped.append(request_id)
-                self.drop_reasons[request_id] = "gate-reject"
-                if self.tracer is not None:
-                    self.tracer.dropped(request_id, "gate-reject")
+                _drop_request(self, request_id, "gate-reject")
                 return False
+        if dabs is not None:
+            self.deadline[request_id] = dabs
         self.queue.append((request_id, prompt, features))
         return True
 
@@ -492,11 +604,21 @@ class ContinuousBatcher:
         scfg = self.engine.scfg
         if scfg.paged:
             self.pool.begin_wave()
-        now = time.perf_counter() if self.tracer is not None else 0.0
-        for b in np.where(self.slot_free)[0]:
-            if not self.queue:
-                break
+        track = self.tracer is not None or bool(self.deadline)
+        now = self._clock() if track else 0.0
+        free_idx = list(np.where(self.slot_free)[0])
+        fi = 0
+        while fi < len(free_idx) and self.queue:
+            b = free_idx[fi]
             rid, prompt, feat = self.queue[0]
+            dabs = self.deadline.get(rid)
+            if dabs is not None and now > dabs:
+                # admission-side deadline check: an expired queue head
+                # never takes a slot (or pages) — drop and retry the
+                # same free slot against the next entry
+                self.queue.popleft()
+                _drop_request(self, rid, "deadline", now)
+                continue
             res = None
             if scfg.paged:
                 # reservation-based admission: the request's whole
@@ -530,10 +652,12 @@ class ContinuousBatcher:
                     self.slot_feat = np.zeros(
                         (len(self.slot_free), len(feat)), np.int32)
                 self.slot_feat[b] = feat
+            fi += 1
 
     def _evict(self, b, now):
         self.done[self.slot_req[b]] = self.slot_gen[b]
         self.done_at[self.slot_req[b]] = now
+        self.deadline.pop(self.slot_req[b], None)
         if self.tracer is not None:
             # same `now` as done_at: tracer spans and drain timestamps
             # agree exactly, not just in order
@@ -550,17 +674,40 @@ class ContinuousBatcher:
             self.slot_res[b] = None
             self.slot_tbl[b] = self.engine.scfg.n_pages
 
+    def _evict_drop(self, b, reason: str, now: float):
+        """Mid-flight eviction on the drop path (deadline / quarantine):
+        frees exactly this slot and reclaims its pages via the release
+        path WITHOUT trie registration — a dropped request's stream is
+        void, so its prefix must never seed the cache."""
+        rid = self.slot_req[b]
+        self.slot_free[b] = True
+        self.slot_req[b] = None
+        if self.engine.scfg.paged:
+            self.pool.release(self.slot_res[b], self.slot_prompt[b],
+                              register=False)
+            self.slot_res[b] = None
+            self.slot_tbl[b] = self.engine.scfg.n_pages
+        _drop_request(self, rid, reason, now)
+
     def run(self, max_steps: int = 1000) -> dict:
         """Decode until queue + slots drain; returns {request_id: tokens}."""
         B = self.engine.scfg.max_batch
         paged = self.engine.scfg.paged
         use_gate = (self.engine._fused is not None
                     and self.slot_feat is not None)
+        inj = self.injector
         for _ in range(max_steps):
+            _service_retries(self)
             self._fill_slots()
             self.max_live = max(self.max_live,
                                 int((~self.slot_free).sum()))
             if self.slot_free.all() and not self.queue:
+                if self._retry_q:
+                    # only backed-off retries left: advance the drain
+                    # clock so deferred submissions come due (there is
+                    # no decode work to run meanwhile)
+                    self._drains += 1
+                    continue
                 break
             use_gate = use_gate or (self.engine._fused is not None
                                     and self.slot_feat is not None)
@@ -582,7 +729,24 @@ class ContinuousBatcher:
                 logits, _ = self.engine.step(
                     tok[:, None], self.slot_feat if use_gate else None)
                 nxt = np.asarray(logits.argmax(axis=-1))
-            now = time.perf_counter()
+            now = self._clock()
+            if inj is not None:
+                # fault injection lives HERE, at the host drain boundary
+                # (the host batcher drains every step) — the jitted
+                # decode above never sees a fault plan
+                evs = inj.corruptions(self.trace_shard, self._drains)
+                if evs:
+                    # np.asarray over a jax buffer is a read-only view
+                    nxt = nxt.copy()
+                for ev in evs:
+                    if ev.slot < B and not self.slot_free[ev.slot]:
+                        nxt[ev.slot] = ev.value
+                if paged:
+                    for ev in inj.exhaustions(self.trace_shard,
+                                              self._drains):
+                        held = self.pool.hold_free_pages()
+                        self._exh_holds.append(
+                            [self._drains + ev.hold_drains, held])
             for b in range(B):
                 if self.slot_free[b]:
                     continue
@@ -592,12 +756,35 @@ class ContinuousBatcher:
                                        len(self.slot_prompt[b]))
                 if self.slot_ptr[b] < len(self.slot_prompt[b]):
                     continue  # mid-prompt prediction: discard
-                self.slot_gen[b].append(int(nxt[b]))
+                tokv = int(nxt[b])
+                self.slot_gen[b].append(tokv)
+                if not (0 <= tokv < self._vocab):
+                    # per-drain finite check: greedy argmax can never
+                    # emit outside [0, vocab), so an out-of-range token
+                    # is a poisoned sample — quarantine exactly this
+                    # slot, every other stream unaffected
+                    self._evict_drop(b, "quarantined", now)
+                    continue
                 if self.tracer is not None and len(self.slot_gen[b]) == 1:
                     self.tracer.first_token(self.slot_req[b], t=now)
                 if (len(self.slot_gen[b]) >= self.max_tokens
                         or int(nxt[b]) == self.eos):
                     self._evict(b, now)
+            if self.deadline:
+                for b in range(B):
+                    if self.slot_free[b]:
+                        continue
+                    dabs = self.deadline.get(self.slot_req[b])
+                    if dabs is not None and now > dabs:
+                        self._evict_drop(b, "deadline", now)
+            self._drains += 1
+            if self._exh_holds:
+                due = [h for h in self._exh_holds if h[0] <= self._drains]
+                if due:
+                    self._exh_holds = [h for h in self._exh_holds
+                                       if h[0] > self._drains]
+                    for _, pages in due:
+                        self.pool.release_held(pages)
         return self.done
 
 
@@ -638,7 +825,11 @@ class DeviceContinuousBatcher:
                  max_tokens: int = 32, sync_every: int = 8,
                  pregate: bool = True, mesh=None,
                  prefill_chunk: int = 1, max_queue: Optional[int] = None,
-                 tracer=None, metrics=None):
+                 tracer=None, metrics=None, max_retries: int = 0,
+                 retry_backoff: int = 1,
+                 deadline_s: Optional[float] = None,
+                 fault_injector=None,
+                 clock: Callable[[], float] = time.perf_counter):
         self.engine = engine
         self.eos = int(eos_token)
         self.max_tokens = int(max_tokens)
@@ -646,6 +837,19 @@ class DeviceContinuousBatcher:
         self.pregate = pregate
         self.prefill_chunk = max(1, int(prefill_chunk))
         self.max_queue = max_queue
+        # failure handling (all host-side, applied at sync boundaries):
+        # queue-full retry budget, default deadline, drain-boundary
+        # fault injector, injectable clock for deterministic tests
+        self.max_retries = int(max_retries)
+        self.retry_backoff = max(1, int(retry_backoff))
+        self.default_deadline_s = deadline_s
+        self.injector = fault_injector
+        self._clock = clock
+        self._drains = 0
+        self._retry_q: collections.deque = collections.deque()
+        self._exh_holds: List[list] = []
+        self._host_drops: Dict[int, Tuple[int, str, float]] = {}
+        self._vocab = engine.cfg.vocab_size
         # mesh defaults to the engine's: a placed engine serves a placed
         # batcher unless the caller explicitly overrides
         self.mesh = engine.mesh if mesh is None else mesh
@@ -678,6 +882,8 @@ class DeviceContinuousBatcher:
         self.done_at: dict = {}
         self.dropped: list = []
         self.drop_reasons: dict = {}
+        self.dropped_at: dict = {}
+        self.deadline: dict = {}  # request_id -> absolute deadline
         # per-slot carryover from a max_steps-bounded run: rid, gen, last
         # token, gate features, partial token ring (+ prompt/pos/block
         # table in paged mode)
@@ -706,18 +912,23 @@ class DeviceContinuousBatcher:
             self.pool.bind_metrics(metrics)
 
     def submit(self, request_id, prompt_tokens,
-               features: Optional[np.ndarray] = None):
+               features: Optional[np.ndarray] = None,
+               deadline_s: Optional[float] = None):
         """Enqueue; admission happens batched in ``run()``.
 
         ``prompt_tokens`` is a token sequence (bare int = length-1
         prompt).  The paged path prefill-chunks it inside the fused
         step; the dense path has one global position per step, so it
-        accepts single-token prompts only.
+        accepts single-token prompts only.  ``deadline_s`` (falls back
+        to the batcher default) bounds queue + serve time: an expired
+        budget drops at admission (wave build) and a mid-flight expiry
+        evicts the slot at the next sync boundary.
         """
         try:
             prompt = validate_prompt_or_drop(
                 self.engine.scfg, request_id, prompt_tokens,
-                self.max_tokens, self.dropped, self.drop_reasons)
+                self.max_tokens, self.dropped, self.drop_reasons,
+                dropped_at=self.dropped_at)
         except ValueError:
             if (self.tracer is not None
                     and self.drop_reasons.get(request_id) == "empty-prompt"):
@@ -725,21 +936,32 @@ class DeviceContinuousBatcher:
             raise
         if self.tracer is not None:
             self.tracer.submitted(request_id)
+        ddl = deadline_s if deadline_s is not None else self.default_deadline_s
+        dabs = None
+        if ddl is not None:
+            if ddl <= 0:
+                _drop_request(self, request_id, "deadline")
+                return False
+            dabs = self._clock() + float(ddl)
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
-            self.dropped.append(request_id)
-            self.drop_reasons[request_id] = "queue-full"
-            if self.tracer is not None:
-                self.tracer.dropped(request_id, "queue-full")
+            feat_n = None if features is None else np.asarray(features)
+            if self.max_retries > 0:
+                _defer_full(self, request_id, prompt, feat_n, dabs)
+                return True
+            _drop_request(self, request_id, "queue-full")
             return False
+        if dabs is not None:
+            self.deadline[request_id] = dabs
         self.queue.append((
             request_id, prompt,
             None if features is None else np.asarray(features)))
         return True
 
     def pending_work(self) -> int:
-        """Un-served load: queued entries + in-flight carryover slots
-        (the router's rebalancing signal)."""
-        return len(self.queue) + sum(c is not None for c in self._carry)
+        """Un-served load: queued entries + backed-off retries +
+        in-flight carryover slots (the router's rebalancing signal)."""
+        return (len(self.queue) + len(self._retry_q)
+                + sum(c is not None for c in self._carry))
 
     @property
     def _pfree(self) -> np.ndarray:
@@ -1033,16 +1255,136 @@ class DeviceContinuousBatcher:
 
         return jax.jit(run_k, donate_argnums=(1,))
 
+    # -------------------------------------------------------------- faults
+    def _apply_drain_faults(self, st, req_ids, now, steps_run, traced):
+        """Failure handling at ONE host drain boundary: poison
+        quarantine, deadline eviction, pool-exhaustion holds.
+
+        Mutates only host-rebuildable slot leaves (``free``/``tbl``/
+        ``pref``) *between* ``run_k`` calls — the jitted kernel itself
+        never sees a fault, so the no-fault path stays byte-identical
+        and every run with the same seeded plan replays exactly.
+        Returns the (possibly updated) state and, for traced runs, the
+        ``(step, slots_freed, pages_freed)`` events the schedule replay
+        must fold in so its resource model tracks the real kernel.
+        """
+        inj = self.injector
+        shard = self.trace_shard
+        drain = self._drains - 1  # 0-based boundary just completed
+        B = self._B
+        NP = self.engine.scfg.n_pages if self.paged else 0
+        names = ["free", "req", "gen"]
+        if self.paged:
+            names += ["tbl", "pref"]
+        if inj is not None:
+            names.append("out_tok")
+        host = jax.device_get({k2: st[k2] for k2 in names})
+        free = np.asarray(host["free"]).copy()
+        req = np.asarray(host["req"])
+        gen = np.asarray(host["gen"])
+        evict: Dict[int, str] = {}
+        if inj is not None:
+            out_tok = np.asarray(host["out_tok"]).copy()
+            for ev in inj.corruptions(shard, drain):
+                b = ev.slot
+                if b < B and not free[b] and gen[b] > 0:
+                    out_tok[int(req[b]),
+                            min(int(gen[b]) - 1,
+                                self.max_tokens - 1)] = ev.value
+            # per-drain finite check: greedy argmax can never emit
+            # outside [0, vocab), so an out-of-range last token marks a
+            # poisoned sample — quarantine exactly that slot
+            for b in range(B):
+                if free[b] or gen[b] == 0:
+                    continue
+                t = int(out_tok[int(req[b]),
+                                min(int(gen[b]) - 1, self.max_tokens - 1)])
+                if not 0 <= t < self._vocab:
+                    evict[b] = "quarantined"
+        if self.deadline:
+            for b in range(B):
+                if free[b] or b in evict:
+                    continue
+                qi = int(req[b])
+                if qi >= len(req_ids):
+                    continue
+                dabs = self.deadline.get(req_ids[qi])
+                if dabs is not None and now > dabs:
+                    evict[b] = "deadline"
+        upd: Dict[str, np.ndarray] = {}
+        events: List[Tuple[int, int, int]] = []
+        tbl = pref = None
+        if evict:
+            if self.paged:
+                tbl = np.asarray(host["tbl"]).copy()
+                pref = np.asarray(host["pref"]).copy()
+            for b, reason in evict.items():
+                qi = int(req[b])
+                rid = req_ids[qi]
+                free[b] = True
+                pg = 0
+                if self.paged:
+                    valid = tbl[b][tbl[b] < NP]
+                    np.subtract.at(pref, valid, 1)
+                    pg = int((pref[valid] == 0).sum())
+                    tbl[b] = NP
+                # traced runs emit from the replay (consistent steps +
+                # interpolated times); trace=False defers to it
+                _drop_request(self, rid, reason, now, trace=not traced)
+                if traced:
+                    self._host_drops[qi] = (steps_run, reason, now)
+                    events.append((steps_run + 1, 1, pg))
+            upd["free"] = free
+            if self.paged:
+                upd["tbl"] = tbl
+                upd["pref"] = pref
+        if self.paged:
+            if inj is not None:
+                for ev in inj.exhaustions(shard, drain):
+                    if pref is None:
+                        pref = np.asarray(host["pref"]).copy()
+                    held = np.where(pref == 0)[0]
+                    pref[held] += 1
+                    self._exh_holds.append(
+                        [self._drains + ev.hold_drains, held])
+            due = [h for h in self._exh_holds if h[0] <= self._drains]
+            if due:
+                if pref is None:
+                    pref = np.asarray(host["pref"]).copy()
+                for _, pages in due:
+                    pref[pages] -= 1
+                self._exh_holds = [h for h in self._exh_holds
+                                   if h[0] > self._drains]
+            if pref is not None:
+                upd["pref"] = pref
+        if upd:
+            upd2 = {k2: jnp.asarray(v) for k2, v in upd.items()}
+            if self.mesh is not None:
+                upd2 = jax.device_put(
+                    upd2, SH.serve_state_shardings(upd2, self.mesh, B))
+            st = dict(st, **upd2)
+        return st, events
+
     # ----------------------------------------------------------------- run
     def run(self, max_steps: int = 1000) -> dict:
         """Decode until queue + slots drain (or ``max_steps``); returns
         {request_id: tokens}.  Unfinished work survives: in-flight slots
         and un-admitted queue entries resume on the next ``run()``."""
+        _service_retries(self)
         pending = list(self.queue)
         self.queue.clear()
         carry = [(b, c) for b, c in enumerate(self._carry) if c is not None]
         if not pending and not carry:
-            return self.done
+            if self._retry_q:
+                # nothing to decode but retries are parked: an empty
+                # run() counts as one drain boundary, so backoff elapses
+                # and deferred entries eventually re-enter the queue
+                self._drains += 1
+                _service_retries(self)
+                pending = list(self.queue)
+                self.queue.clear()
+            if not pending:
+                return self.done
         eng = self.engine
         # batched admission: ONE gate launch over the whole waiting queue
         keep = np.ones(len(pending), bool)
@@ -1052,12 +1394,16 @@ class DeviceContinuousBatcher:
                 np.stack([pending[i][2] for i in gated]))
         req_ids: List[Any] = [c["rid"] for _, c in carry]
         kept: List[Tuple[Any, list, Optional[np.ndarray]]] = []
+        now0 = self._clock() if self.deadline else 0.0
         for k, (rid, prompt, feat) in enumerate(pending):
+            dabs = self.deadline.get(rid)
+            if dabs is not None and now0 > dabs:
+                # admission-side deadline check: an expired entry never
+                # enters the wave (or reserves pages)
+                _drop_request(self, rid, "deadline", now0)
+                continue
             if not keep[k]:
-                self.dropped.append(rid)
-                self.drop_reasons[rid] = "gate-reject"
-                if self.tracer is not None:
-                    self.tracer.dropped(rid, "gate-reject")
+                _drop_request(self, rid, "gate-reject")
                 continue
             req_ids.append(rid)
             kept.append((rid, prompt, feat))
@@ -1216,6 +1562,15 @@ class DeviceContinuousBatcher:
                 self._run_k[key] = self._make_run_k(Nq, R, n_feat)
         run_k = self._run_k[key]
 
+        inj = self.injector
+        if (traced and inj is not None
+                and inj.pending_kinds(self.trace_shard, PoolExhaust)):
+            raise ValueError(
+                "pool-exhaust injection is unsupported on a traced run: "
+                "the schedule replay models page releases only at slot "
+                "evictions, so phantom holds would make tracer spans lie")
+        self._host_drops = {}
+        fault_events: List[Tuple[int, int, int]] = []
         seen = np.zeros(R, bool)
         remaining = max_steps
         alive = True
@@ -1223,31 +1578,49 @@ class DeviceContinuousBatcher:
         # (device step, host time) sync boundaries: in-flight events get
         # interpolated host timestamps between them (traced runs only;
         # the kernel call itself is identical either way)
-        boundaries = [(0, time.perf_counter())]
+        boundaries = [(0, self._clock())]
         while remaining > 0:
             k = min(self.sync_every, remaining)
             st, alive = run_k(eng.params, st, *args, jnp.int32(k))
             done_mask = np.asarray(st["out_done"])  # drain every K
-            now = time.perf_counter()
+            now = self._clock()
+            # nominal cumulative count — only the final trip can exit
+            # early, and the traced tail boundary is clamped to the
+            # replayed schedule's actual last step below
+            steps_run += k
             if traced:
-                # nominal cumulative count — only the final trip can
-                # exit early, and the tail boundary is clamped to the
-                # replayed schedule's actual last step below
-                steps_run += k
                 boundaries.append((steps_run, now))
             remaining -= k
             for qi in np.where(done_mask & ~seen)[0]:
                 self.done_at[req_ids[qi]] = now
+                self.deadline.pop(req_ids[qi], None)
                 if traced:
                     # the same `now` as done_at: drain timestamps and
                     # tracer spans agree exactly
                     self.tracer.drained(req_ids[qi], t=now)
             seen = done_mask
+            self._drains += 1
+            # the fault path is ENTIRELY gated: with no injector, no
+            # deadline and no standing exhaust hold, the drive loop is
+            # the exact pre-fault byte sequence (failure is free when
+            # nothing fails)
+            ft = (bool(self.deadline) or bool(self._exh_holds)
+                  or (inj is not None and inj.pending_for(self.trace_shard)))
+            if ft:
+                st, evs = self._apply_drain_faults(
+                    st, req_ids, now, steps_run, traced)
+                fault_events.extend(evs)
             if not bool(alive):
                 break
         if self.paged:
             self._pages = st["pages"]
             self.pool.ref[:] = np.asarray(st["pref"])
+            if self._exh_holds:
+                # phantom holds never outlive the run: the host mirror
+                # must agree with live reservations + cache holds
+                for _, pages in self._exh_holds:
+                    self.pool.ref[pages] -= 1
+                self._exh_holds = []
             self.pool.observe_occupancy()
             # sharing stats: count exactly the entries the step admitted
             # this run (head = queue entries consumed); re-enqueued
@@ -1317,6 +1690,12 @@ class DeviceContinuousBatcher:
                             own[:nfp] = False
                         pg = int(own.sum())
                     heapq.heappush(events, (s_done[qi] + 1, 1, pg))
+            for ev in fault_events:
+                # host-side fault evictions (deadline / quarantine) free
+                # their slot and pages one step past the drain boundary
+                # they fired at — fold them into the resource model so
+                # the replayed fill keeps matching the kernel's
+                heapq.heappush(events, ev)
             free_slots = B - C
             free_pages = int((pref0 == 0).sum()) if self.paged else 0
             step, qp = 1, 0
@@ -1387,6 +1766,7 @@ class DeviceContinuousBatcher:
                         gen_end[int(trq[b])] = int(tg[b])
             tracer, shard = self.tracer, self.trace_shard
             rids = list(req_ids)
+            host_drops = dict(self._host_drops)
 
             def emit():
                 # one vectorised step->time interpolation per event
@@ -1415,6 +1795,26 @@ class DeviceContinuousBatcher:
                                            t=float(t_don[qi]),
                                            step=base + s_done[qi])
                             continue
+                    hd = host_drops.get(qi)
+                    if hd is not None:
+                        # host fault eviction: terminal at the drain
+                        # boundary that observed it (recorded wall time
+                        # + absolute device step)
+                        step_h, reason, t_h = hd
+                        if (s_first[qi] is not None
+                                and s_first[qi] <= step_h
+                                and gen_end.get(qi, 1) >= 1):
+                            tracer.first_token(rid, t=float(t_fst[qi]),
+                                               step=base + s_first[qi])
+                        if reason == "deadline":
+                            tracer.deadline_dropped(
+                                rid, t=t_h, step=base + step_h,
+                                shard=shard)
+                        else:
+                            tracer.quarantined(
+                                rid, t=t_h, step=base + step_h,
+                                shard=shard)
+                        continue
                     if seen[qi]:
                         if s_first[qi] is not None:
                             tracer.first_token(rid, t=float(t_fst[qi]),
@@ -1448,8 +1848,9 @@ class DeviceContinuousBatcher:
                     self.pool.register_completed(
                         prompt, [int(p) for p in out_tbl[qi][:nfp]])
             elif out_drop[qi]:
-                self.dropped.append(req_ids[qi])
-                self.drop_reasons[req_ids[qi]] = "gate-reject"
+                # traced runs emit the tracer event from the replay
+                _drop_request(self, req_ids[qi], "gate-reject",
+                              trace=False)
         # carry in-flight slots + re-enqueue un-admitted entries so a
         # later run() resumes the exact schedule (host-batcher semantics)
         self._carry = [None] * B

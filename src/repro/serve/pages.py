@@ -174,6 +174,43 @@ class PagePool:
     def free_count(self) -> int:
         return int((self.ref == 0).sum())
 
+    def page_accounting(self, live_tables=()) -> Dict[str, int]:
+        """Partition the pool against external truth: ``free`` (ref 0),
+        ``cached`` (held by the prefix trie, no live sharer), ``live``
+        (referenced by at least one table in ``live_tables``).  The
+        fault/eviction invariant ``free + cached + live == n_pages``
+        only holds when every page is exactly one of the three — i.e.
+        no reference leaked by a mid-flight eviction."""
+        live: Set[int] = set()
+        for tbl in live_tables:
+            for p in tbl:
+                if 0 <= int(p) < self.n:
+                    live.add(int(p))
+        cached = set(self._cached) - live
+        free = {p for p in range(self.n) if self.ref[p] == 0}
+        return {"free": len(free), "cached": len(cached),
+                "live": len(live),
+                "leaked": self.n - len(free) - len(cached) - len(live)}
+
+    def hold_free_pages(self, k: Optional[int] = None) -> np.ndarray:
+        """Take one phantom reference on up to ``k`` free pages (all of
+        them by default) — the pool-exhaustion injection primitive:
+        admission sees zero free pages until :meth:`release_held`.
+        Host-side only; the device batcher applies the same +1 to its
+        donated ``pref`` copy so the two views stay in sync."""
+        free = np.where(self.ref == 0)[0]
+        held = free if k is None else free[: int(k)]
+        self.ref[held] += 1
+        self.observe_occupancy()
+        return held
+
+    def release_held(self, pages: np.ndarray) -> None:
+        """Drop phantom references taken by :meth:`hold_free_pages`."""
+        self.ref[np.asarray(pages, np.int64)] -= 1
+        if (self.ref < 0).any():
+            raise AssertionError("exhaustion hold released twice")
+        self.observe_occupancy()
+
     @property
     def n_cached(self) -> int:
         return len(self._cached)

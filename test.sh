@@ -9,6 +9,7 @@
 #   serve-bench-sharded        sharded router parity on a 1xN mesh  (exit 42)
 #   serve-bench-prefill        chunked paged prefill parity smoke   (exit 43)
 #   serve-bench-shared-prefix  prefix-sharing + int8 page pool      (exit 44)
+#   serve-bench-faults         seeded crash/poison failover parity  (exit 45)
 #   pytest                     the tier-1 suite                     (pytest's)
 #
 # Bench JSONs land in ${BENCH_DIR:-/tmp/bench-artifacts} so CI can
@@ -59,6 +60,16 @@ PYTHONPATH=src:. python -m benchmarks.serve_bench --smoke \
     --scenario shared-prefix \
     --out "$BENCH_DIR/BENCH_serve_shared_prefix.json" \
     || fail serve-bench-shared-prefix 44
+
+# fault-tolerance rot-check: a seeded 2-shard crash + poisoned sample
+# must recover every request (fraction 1.0) with survivor AND replayed
+# streams bit-identical to a fault-free reference (runs on every
+# device-count leg — the fleet is mesh-less, so the leg only changes
+# the XLA device count, never the schedule)
+echo "[test.sh] phase: serve-bench-faults"
+PYTHONPATH=src:. python -m benchmarks.serve_bench --smoke \
+    --scenario faults --out "$BENCH_DIR/BENCH_serve_faults.json" \
+    || fail serve-bench-faults 45
 
 echo "[test.sh] phase: pytest"
 # --durations surfaces the slowest tests in the CI log so suite-time

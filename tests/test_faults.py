@@ -1,0 +1,454 @@
+"""Fault tolerance on the serve path: deterministic injection, shard
+failover, request deadlines, poison quarantine, preemption snapshots.
+
+The contract under test (see ``repro.serve.faults`` and the ``faults``
+scenario in ``benchmarks/serve_bench.py``): every fault is applied at a
+host drain boundary from a seeded, replayable plan — the jitted serve
+kernel is never touched — so a faulted run is deterministic, every
+submitted request reaches a terminal state, and streams the faults never
+touched stay bit-identical to a fault-free reference.  Deadlines use the
+batchers' injectable ``clock`` so the tests pin expiry exactly instead
+of sleeping.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.arch import model as M
+from repro.ckpt import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.obs import Metrics
+from repro.serve.engine import (ContinuousBatcher, DeviceContinuousBatcher,
+                                ServeConfig, ServeEngine)
+from repro.serve.faults import (INF_TOKEN, NAN_TOKEN, CorruptTokens,
+                                FaultPlan, PoolExhaust, ShardCrash,
+                                SlowShard, preempt_snapshot, queue_to_tree,
+                                tree_to_queue, warm_restart)
+from repro.serve.router import ShardedServe, rendezvous_shard
+
+MAX_TOKENS = 3
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("qwen2_1_5b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(n, seed=0, lo=1, hi=6):
+    rng = np.random.default_rng(seed)
+    return {rid: [int(t) for t in rng.integers(1, 97,
+                                               rng.integers(lo, hi))]
+            for rid in range(n)}
+
+
+# ---------------------------------------------------------------- pure units
+
+def test_fault_plan_parse():
+    plan = FaultPlan.parse(
+        "crash:1@2, slow:0:1.5@1, nan:3@2, inf:2:1@3, exhaust:0:2@4")
+    assert plan.faults == (
+        ShardCrash(shard=1, at_drain=2),
+        SlowShard(shard=0, delay_s=1.5, at_drain=1),
+        CorruptTokens(slot=3, at_drain=2, shard=0, value=NAN_TOKEN),
+        CorruptTokens(slot=2, at_drain=3, shard=1, value=INF_TOKEN),
+        PoolExhaust(at_drain=4, shard=0, hold_drains=2),
+    )
+    with pytest.raises(ValueError, match="needs @"):
+        FaultPlan.parse("crash:1")
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan.parse("meteor:0@1")
+    with pytest.raises(TypeError, match="not a fault event"):
+        FaultPlan(["crash"])
+
+
+def test_fault_plan_seeded_replayable():
+    """Same seed, same plan — and the liveness pins hold: the crash
+    never targets shard 0 (where the corruption lands), drains are past
+    the first fill."""
+    for seed in range(8):
+        a = FaultPlan.seeded(seed, n_shards=4, n_slots=8, max_drain=3)
+        b = FaultPlan.seeded(seed, n_shards=4, n_slots=8, max_drain=3)
+        assert a.faults == b.faults
+        kinds = {type(f) for f in a}
+        assert kinds == {ShardCrash, CorruptTokens}
+        for f in a:
+            assert 1 <= f.at_drain <= 3
+            if isinstance(f, ShardCrash):
+                assert 1 <= f.shard < 4
+            else:
+                assert f.shard == 0 and 0 <= f.slot < 8
+    # single shard: nothing to crash into, only the corruption remains
+    assert {type(f) for f in FaultPlan.seeded(0, n_shards=1)} \
+        == {CorruptTokens}
+
+
+def test_rendezvous_minimal_remap():
+    """The failover property: removing one shard remaps ONLY the keys
+    whose home it was; every other key keeps its shard.  (mod-N hashing
+    reshuffles ~all keys on any membership change.)"""
+    shards = [0, 1, 2, 3]
+    before = {k: rendezvous_shard(k, shards) for k in range(256)}
+    assert set(before.values()) == set(shards)  # all shards reachable
+    dead = 2
+    survivors = [s for s in shards if s != dead]
+    for k, home in before.items():
+        after = rendezvous_shard(k, survivors)
+        if home != dead:
+            assert after == home  # healthy keys never move
+        else:
+            assert after in survivors
+    with pytest.raises(ValueError, match="empty shard set"):
+        rendezvous_shard(0, [])
+
+
+def test_injector_one_shot_consumption():
+    inj = FaultPlan([ShardCrash(1, 2), SlowShard(0, 2.5, 1),
+                     CorruptTokens(3, 1), PoolExhaust(2)]).injector()
+    assert inj.pending_for(0) and inj.pending_for(1)
+    assert not inj.crash_due(1, 1)      # not due yet
+    assert inj.crash_due(1, 5)          # late boundary still fires
+    assert not inj.crash_due(1, 5)      # ... exactly once
+    assert inj.slow_delay(0, 1) == 2.5
+    assert inj.slow_delay(0, 1) == 0.0
+    assert [c.slot for c in inj.corruptions(0, 1)] == [3]
+    assert inj.corruptions(0, 1) == []
+    assert inj.pending_kinds(0, PoolExhaust) and inj.pending_for(0)
+    assert [e.at_drain for e in inj.exhaustions(0, 2)] == [2]
+    assert not inj.pending_for(0) and not inj.pending_for(1)
+    assert len(inj.fired) == 4
+
+
+def test_queue_snapshot_roundtrip():
+    entries = [
+        (7, [1, 2, 3], np.asarray([4, 5], np.int32), 12.5),
+        (9, [6], None, None),
+        (11, [8, 8, 8, 8], np.asarray([1, 2], np.int32), 0.0),
+    ]
+    back = tree_to_queue(queue_to_tree(entries))
+    assert len(back) == len(entries)
+    for (rid, p, f, d), (rid2, p2, f2, d2) in zip(entries, back):
+        assert rid2 == rid and p2 == p and d2 == d
+        if f is None:
+            assert f2 is None
+        else:
+            np.testing.assert_array_equal(f2, f)
+
+
+def test_metrics_merge_exact():
+    """Cross-shard aggregation: counters add, gauges last-write-wins,
+    histograms merge by adding counts on the shared bucket geometry."""
+    a, b = Metrics(), Metrics()
+    a.counter("served").inc(3)
+    b.counter("served").inc(4)
+    b.counter("only_b").inc()
+    a.gauge("depth").set(5)
+    b.gauge("depth").set(9)
+    rng = np.random.default_rng(0)
+    va = [float(v) for v in rng.uniform(0.01, 50.0, 40)]
+    vb = [float(v) for v in rng.uniform(0.01, 50.0, 40)]
+    for v in va:
+        a.histogram("lat").observe(v)
+    for v in vb:
+        b.histogram("lat").observe(v)
+    both = Metrics()
+    for v in va + vb:
+        both.histogram("lat").observe(v)
+    a.merge(b)
+    assert a.counter("served").value == 7
+    assert a.counter("only_b").value == 1
+    assert a.gauge("depth").value == 9
+    h = a.histogram("lat")
+    assert h.counts == both.histogram("lat").counts  # exact, not approx
+    assert h.count == 80 and h.min == min(va + vb) and h.max == max(va + vb)
+
+
+# --------------------------------------------------------- host batcher path
+
+def test_host_deadline_admission_and_midflight(setup):
+    """Pinned clock: an expired queue head never takes a slot, and a
+    live slot whose budget runs out is evicted at the next drain
+    boundary with its terminal bookkeeping recorded."""
+    cfg, params = setup
+    t = [0.0]
+    cb = ContinuousBatcher(
+        ServeEngine(cfg, params, ServeConfig(max_batch=2, cache_len=32)),
+        eos_token=-1, max_tokens=MAX_TOKENS, clock=lambda: t[0])
+    assert cb.submit("live", 5)
+    assert cb.submit("expired", 6, deadline_s=1.0)   # dabs = 1.0
+    assert cb.submit("victim", 7, deadline_s=50.0)   # dabs = 50.0
+    t[0] = 2.0   # past "expired"'s budget before any slot fill
+    cb.run(max_steps=1)
+    assert cb.drop_reasons["expired"] == "deadline"
+    assert "expired" in cb.dropped_at
+    t[0] = 60.0  # "victim" is now mid-flight and over budget
+    done = cb.run(max_steps=50)
+    assert cb.drop_reasons["victim"] == "deadline"
+    assert "victim" not in done and "live" in done
+    assert len(done["live"]) == MAX_TOKENS
+    # zero-budget submissions drop immediately, never queue
+    assert not cb.submit("zero", 8, deadline_s=0.0)
+    assert cb.drop_reasons["zero"] == "deadline"
+
+
+def test_host_quarantine_exact_slot(setup):
+    """A poisoned sample (out-of-vocab sentinel) evicts exactly the
+    offending slot; every other stream matches the fault-free run.
+    Paged cache: per-slot positions make streams schedule-pure, so the
+    eviction reshuffling admission order must not change survivors."""
+    cfg, params = setup
+    scfg = ServeConfig(max_batch=2, cache_len=32, page_size=8)
+
+    def serve(injector):
+        cb = ContinuousBatcher(ServeEngine(cfg, params, scfg),
+                               eos_token=-1, max_tokens=MAX_TOKENS,
+                               fault_injector=injector)
+        for rid in range(3):
+            cb.submit(rid, rid + 5)
+        return cb, cb.run(max_steps=60)
+
+    _, ref = serve(None)
+    inj = FaultPlan([CorruptTokens(slot=0, at_drain=0)]).injector()
+    cb, done = serve(inj)
+    assert cb.drop_reasons[0] == "quarantined"
+    assert 0 in cb.dropped_at and 0 not in done
+    for rid in (1, 2):
+        assert done[rid] == ref[rid]
+    assert inj.fired  # the plan actually applied
+
+
+def test_host_queue_full_retry_backoff(setup):
+    """With a retry budget, a full queue defers (drain-boundary
+    backoff) instead of dropping; with none it drops ``queue-full``."""
+    cfg, params = setup
+    scfg = ServeConfig(max_batch=1, cache_len=32)
+    cb = ContinuousBatcher(ServeEngine(cfg, params, scfg), eos_token=-1,
+                           max_tokens=MAX_TOKENS, max_queue=1,
+                           max_retries=3, retry_backoff=1)
+    for rid in range(3):
+        assert cb.submit(rid, rid + 1)  # 1 queued + 2 deferred
+    assert len(cb._retry_q) == 2
+    done = cb.run(max_steps=100)
+    assert sorted(done) == [0, 1, 2] and not cb.dropped
+
+    strict = ContinuousBatcher(ServeEngine(cfg, params, scfg),
+                               eos_token=-1, max_tokens=MAX_TOKENS,
+                               max_queue=1)
+    assert strict.submit(0, 1)
+    assert not strict.submit(1, 2)
+    assert strict.drop_reasons[1] == "queue-full"
+
+
+def test_host_pool_exhaustion_blocks_then_recovers(setup):
+    """An injected exhaustion pins every free page, so admission
+    FIFO-blocks; when the hold releases, the queue drains and the run
+    completes with nothing dropped and nothing leaked."""
+    cfg, params = setup
+    scfg = ServeConfig(max_batch=2, cache_len=32, page_size=8, pages=6)
+    inj = FaultPlan([PoolExhaust(at_drain=1, hold_drains=3)]).injector()
+    cb = ContinuousBatcher(ServeEngine(cfg, params, scfg), eos_token=-1,
+                           max_tokens=MAX_TOKENS, fault_injector=inj)
+    prompts = _prompts(4, seed=3)
+    for rid, p in prompts.items():
+        cb.submit(rid, p)
+    done = cb.run(max_steps=200)
+    assert sorted(done) == sorted(prompts) and not cb.dropped
+    assert inj.fired and not cb._exh_holds
+    acct = cb.pool.page_accounting()
+    assert acct["leaked"] == 0 and acct["live"] == 0
+
+
+# ------------------------------------------------------- device batcher path
+
+def test_device_deadline_and_quarantine_pool_clean(setup):
+    """Device path: a deadline expiry and a poisoned sample each evict
+    exactly their slot at a drain boundary; survivors match the
+    fault-free reference bit for bit and the page pool balances
+    (free + cached + live == pages — no reference leaks from
+    mid-flight evictions)."""
+    cfg, params = setup
+    scfg = ServeConfig(max_batch=4, cache_len=32, page_size=8)
+    prompts = _prompts(4, seed=1)
+
+    ref = DeviceContinuousBatcher(ServeEngine(cfg, params, scfg),
+                                  eos_token=-1, max_tokens=6,
+                                  sync_every=2, prefill_chunk=3)
+    for rid, p in prompts.items():
+        ref.submit(rid, p)
+    ref_done = dict(ref.run(max_steps=400))
+
+    t = [0.0]
+
+    def clock():  # one tick per query: drains advance the deadline clock
+        t[0] += 1.0
+        return t[0]
+
+    inj = FaultPlan([CorruptTokens(slot=1, at_drain=1)]).injector()
+    cb = DeviceContinuousBatcher(ServeEngine(cfg, params, scfg),
+                                 eos_token=-1, max_tokens=6,
+                                 sync_every=2, prefill_chunk=3,
+                                 fault_injector=inj, clock=clock)
+    for rid, p in prompts.items():
+        # rid 0's budget expires by the first drain boundary (the clock
+        # ticks once at submit, once at wave build, then every sync
+        # boundary), long before its 6-token decode can finish
+        cb.submit(rid, p, deadline_s=2.0 if rid == 0 else None)
+    done = dict(cb.run(max_steps=400))
+    assert cb.drop_reasons[0] == "deadline"
+    assert cb.drop_reasons[1] == "quarantined"
+    assert sorted(done) == [2, 3]
+    for rid in (2, 3):
+        assert done[rid] == ref_done[rid]
+    assert 0 in cb.dropped_at and 1 in cb.dropped_at
+    live = [c["tbl"] for c in cb._carry if c is not None]
+    assert cb.pool.page_accounting(live)["leaked"] == 0
+
+
+def test_device_retry_backoff_drain_boundaries(setup):
+    """Deferred queue-full submissions come due by drain count, not
+    wall clock: an empty run() advances the boundary so parked retries
+    re-enter, and exhausted budgets drop ``queue-full``."""
+    cfg, params = setup
+    scfg = ServeConfig(max_batch=2, cache_len=32)
+    cb = DeviceContinuousBatcher(ServeEngine(cfg, params, scfg),
+                                 eos_token=-1, max_tokens=MAX_TOKENS,
+                                 sync_every=2, max_queue=2,
+                                 max_retries=2, retry_backoff=1)
+    for rid in range(5):
+        assert cb.submit(rid, rid + 1)  # 2 queued + 3 deferred
+    assert len(cb._retry_q) == 3
+    for _ in range(8):
+        cb.run(max_steps=40)
+        if len(cb.done) + len(cb.dropped) == 5:
+            break
+    assert len(cb.done) + len(cb.dropped) == 5
+    assert sorted(cb.done) + sorted(
+        r for r in cb.dropped) == sorted(range(5))
+    for r in cb.dropped:
+        assert cb.drop_reasons[r] == "queue-full"
+
+
+# ------------------------------------------------------------- router faults
+
+def test_router_failover_replays_lost_requests(setup):
+    """A crashed shard's queued AND in-flight requests re-route to the
+    survivor and replay from their prompts; nothing vanishes, nothing
+    is double-served, and replayed streams match a fault-free
+    single-host reference (paged cache: a stream is a pure function of
+    its prompt)."""
+    cfg, params = setup
+    scfg = ServeConfig(max_batch=4, cache_len=32, page_size=8)
+    prompts = _prompts(10, seed=2)
+
+    ref = DeviceContinuousBatcher(ServeEngine(cfg, params, scfg),
+                                  eos_token=-1, max_tokens=MAX_TOKENS,
+                                  sync_every=2, prefill_chunk=3)
+    for rid, p in prompts.items():
+        ref.submit(rid, p)
+    ref_done = dict(ref.run(max_steps=400))
+
+    inj = FaultPlan([ShardCrash(shard=1, at_drain=1)]).injector()
+    srv = ShardedServe(cfg, params, scfg, None, eos_token=-1,
+                       max_tokens=MAX_TOKENS, sync_every=2,
+                       prefill_chunk=3, n_shards=2, max_retries=2,
+                       fault_injector=inj)
+    for rid, p in prompts.items():
+        srv.submit(rid, p)
+    done = srv.run(max_steps=400, drain_chunk=2)
+
+    assert srv.failover_log and srv.failover_log[0][:2] \
+        == (1, "crash-injected")
+    assert not srv.alive[1] and srv.alive[0]
+    assert srv.retries  # at least one request actually hopped
+    # full accounting: every request terminal, exactly once
+    assert len(done) + len(srv.dropped) == len(prompts)
+    assert not set(done) & set(srv.dropped)
+    for rid, stream in done.items():
+        assert stream == ref_done[rid]
+    for rid in srv.dropped:
+        assert srv.drop_reasons[rid] in ("shard-failed", "deadline")
+
+
+def test_router_failover_exhausted_retries_drop(setup):
+    """With every shard dead (or the hop budget spent) a lost request
+    drops with reason ``shard-failed`` instead of vanishing."""
+    cfg, params = setup
+    scfg = ServeConfig(max_batch=4, cache_len=32)
+    inj = FaultPlan([ShardCrash(shard=0, at_drain=0),
+                     ShardCrash(shard=1, at_drain=0)]).injector()
+    srv = ShardedServe(cfg, params, scfg, None, eos_token=-1,
+                       max_tokens=MAX_TOKENS, sync_every=2, n_shards=2,
+                       max_retries=2, fault_injector=inj)
+    for rid in range(6):
+        srv.submit(rid, rid + 1)
+    done = srv.run(max_steps=100, drain_chunk=2)
+    assert not done
+    assert sorted(srv.dropped) == list(range(6))
+    assert all(srv.drop_reasons[r] == "shard-failed" for r in srv.dropped)
+    assert rid in srv.dropped_at
+
+
+def test_router_straggler_eviction(setup):
+    """Persistently slow shards (injected virtual delay, so no real
+    sleeping) are evicted after ``straggler_strikes`` consecutive
+    flagged rounds and their work fails over — but the last alive
+    shard is never evicted."""
+    cfg, params = setup
+    scfg = ServeConfig(max_batch=2, cache_len=32)
+    inj = FaultPlan([SlowShard(shard=1, delay_s=30.0, at_drain=d)
+                     for d in range(8)]).injector()
+    srv = ShardedServe(cfg, params, scfg, None, eos_token=-1,
+                       max_tokens=8, sync_every=2, n_shards=2,
+                       max_retries=2, fault_injector=inj,
+                       straggler_strikes=2)
+    for rid in range(8):
+        srv.submit(rid, rid + 1)
+    done = srv.run(max_steps=400, drain_chunk=2)
+    assert any(reason == "straggler" for _, reason, _ in srv.failover_log)
+    assert not srv.alive[1] and srv.alive[0]  # survivor never evicted
+    assert len(done) + len(srv.dropped) == 8
+
+
+def test_router_deadline_threads_through(setup):
+    """Router-side deadlines: zero budget drops at admission; the rest
+    of the wave is unaffected."""
+    cfg, params = setup
+    scfg = ServeConfig(max_batch=4, cache_len=32)
+    srv = ShardedServe(cfg, params, scfg, None, eos_token=-1,
+                       max_tokens=MAX_TOKENS, sync_every=2, n_shards=2)
+    assert not srv.submit("late", 3, deadline_s=0.0)
+    assert srv.drop_reasons["late"] == "deadline"
+    assert srv.submit("ok", 4, deadline_s=60.0)
+    done = srv.run(max_steps=100)
+    assert "ok" in done and "late" in srv.dropped
+
+
+# --------------------------------------------------- preemption + warm start
+
+def test_preempt_snapshot_warm_restart(setup, tmp_path):
+    """SIGTERM workflow at test scale: drain the un-served queue into a
+    CheckpointManager snapshot, then warm-restart a fresh batcher from
+    it — the restored run serves exactly the snapshotted requests."""
+    cfg, params = setup
+    scfg = ServeConfig(max_batch=2, cache_len=32)
+    manager = CheckpointManager(str(tmp_path))
+    cb = ContinuousBatcher(ServeEngine(cfg, params, scfg), eos_token=-1,
+                           max_tokens=MAX_TOKENS)
+    for rid in range(4):
+        cb.submit(rid, rid + 9,
+                  deadline_s=300.0 if rid == 0 else None)
+    assert preempt_snapshot(cb, manager) == 4
+    assert not cb.queue  # drained: the dying process serves nothing more
+
+    fresh = ContinuousBatcher(ServeEngine(cfg, params, scfg), eos_token=-1,
+                              max_tokens=MAX_TOKENS)
+    assert warm_restart(fresh, manager) == 4
+    assert 0 in fresh.deadline  # remaining budget restored, not dropped
+    done = fresh.run(max_steps=60)
+    assert sorted(done) == list(range(4))
+
+    empty = ContinuousBatcher(ServeEngine(cfg, params, scfg), eos_token=-1,
+                              max_tokens=MAX_TOKENS)
+    assert warm_restart(empty, CheckpointManager(str(tmp_path / "none"))) \
+        == 0

@@ -259,6 +259,63 @@ def test_batcher_interleaved_submit_resume_invariants(seed, _pool_engine):
     assert (cb.pool.ref[held] == 1).all()
 
 
+@pytest.mark.parametrize("seed", [0, 1])
+def test_batcher_fault_evictions_no_page_leak(seed, _pool_engine):
+    """Exhaustion-recovery coverage for the fault path: mid-flight
+    deadline evictions and poison quarantines (seeded CorruptTokens at
+    drain boundaries) interleaved with submits and bounded run() must
+    never strand a page — after every run() ``page_accounting`` over
+    the live carry tables shows leaked == 0, and once drained
+    ``freed + cached == pages`` exactly."""
+    from repro.serve.engine import DeviceContinuousBatcher
+    from repro.serve.faults import CorruptTokens, FaultPlan
+
+    make_engine = _pool_engine
+    rng = np.random.default_rng(seed)
+    prefix = [int(t) for t in rng.integers(1, 9, 6)]
+    prompts = [prefix + [int(t) for t in rng.integers(1, 97,
+                                                      rng.integers(1, 5))]
+               for _ in range(8)]
+    # poison a random slot at several drain boundaries; whatever request
+    # occupies it then is quarantined mid-flight (empty slots no-op)
+    plan = FaultPlan([CorruptTokens(slot=int(rng.integers(0, 4)),
+                                    at_drain=int(d))
+                      for d in rng.integers(1, 12, 4)])
+    t = [0.0]
+
+    def clock():
+        t[0] += 1.0
+        return t[0]
+
+    cb = DeviceContinuousBatcher(make_engine(), eos_token=-1, max_tokens=4,
+                                 sync_every=2, prefill_chunk=3,
+                                 fault_injector=plan.injector(),
+                                 clock=clock)
+    pending = list(enumerate(prompts))
+    for _ in range(200):
+        while pending and rng.random() < 0.6:
+            rid, p = pending.pop(0)
+            # a sprinkling of tight budgets => mid-flight deadline
+            # evictions racing the quarantines for the same pages
+            ddl = 3.0 if rng.random() < 0.4 else None
+            cb.submit(rid, p, deadline_s=ddl)
+        cb.run(max_steps=int(rng.integers(1, 6)))
+        live = [c["tbl"] for c in cb._carry if c is not None]
+        acct = cb.pool.page_accounting(live)
+        assert acct["leaked"] == 0, acct
+        assert acct["free"] + acct["cached"] + acct["live"] == cb.pool.n
+        if not pending and not cb.queue \
+                and all(c is None for c in cb._carry):
+            break
+    # every request reached a terminal state, exactly once
+    assert sorted(list(cb.done) + list(cb.dropped)) == list(range(8))
+    for rid in cb.dropped:
+        assert cb.drop_reasons[rid] in ("deadline", "quarantined")
+    acct = cb.pool.page_accounting()
+    assert acct["leaked"] == 0 and acct["live"] == 0
+    assert acct["free"] + acct["cached"] == cb.pool.n
+
+
 @pytest.fixture(scope="module")
 def _pool_engine():
     import jax
