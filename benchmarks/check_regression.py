@@ -89,6 +89,20 @@ _SCHEMA = [
     (("sharded",), dict, False),
     (("sharded", "parity"), bool, False),
     (("sharded", "paged_vs_dense_parity"), bool, False),
+    # paged-attention roofline contract: serve_bench must report the
+    # HBM bytes-per-token accounting for both pool dtypes (jnp gather
+    # path measured via cost_analysis, kernel via its DMA model) and
+    # the resolved default backend
+    (("paged_attention",), dict, True),
+    (("paged_attention", "attn_impl"), str, True),
+    (("paged_attention", "fp32"), dict, True),
+    (("paged_attention", "int8"), dict, True),
+    (("paged_attention", "fp32", "jnp_bytes_per_token"), _NUM, True),
+    (("paged_attention", "fp32", "kernel_bytes_per_token"), _NUM, True),
+    (("paged_attention", "fp32", "reduction"), _NUM, True),
+    (("paged_attention", "int8", "jnp_bytes_per_token"), _NUM, True),
+    (("paged_attention", "int8", "kernel_bytes_per_token"), _NUM, True),
+    (("paged_attention", "int8", "reduction"), _NUM, True),
 ]
 
 
@@ -263,6 +277,18 @@ def check(new: dict, base: dict, timing_tol: float = 0.5) -> int:
                 failures.append(f"faults scenario: {msg} ({count}="
                                 f"{fl.get(count, 0)})")
 
+    pa = new.get("paged_attention", {})
+    if isinstance(pa, dict) and pa:
+        # byte accounting is deterministic (cost_analysis + DMA model),
+        # so the kernel's HBM advantage is a hard gate, not a timing one
+        for pool in ("fp32", "int8"):
+            red = pa.get(pool, {}).get("reduction", 0)
+            if not red or red <= 1.0:
+                failures.append(
+                    f"paged-attention kernel no longer undercuts the "
+                    f"jnp gather path's HBM bytes/token on the {pool} "
+                    f"pool (reduction={red})")
+
     base_tps = base.get("new", {}).get("tokens_per_s")
     new_tps = new.get("new", {}).get("tokens_per_s")
     same_scale = new.get("requests") == base.get("requests")
@@ -299,6 +325,8 @@ def check(new: dict, base: dict, timing_tol: float = 0.5) -> int:
           + f"@{mt.get('trace_overhead', 0):.3f}x"
           + f", faults={fl.get('recovered_fraction')}rec/"
           + f"{fl.get('failed_over_completed')}moved"
+          + f", paged-attn={pa.get('fp32', {}).get('reduction', 0):.1f}x/"
+          + f"i8={pa.get('int8', {}).get('reduction', 0):.1f}x"
           + f", {len(warnings)} timing warning(s)")
     return 0
 

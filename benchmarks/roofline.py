@@ -1,7 +1,11 @@
 """Roofline analysis per (arch × shape) from compiled dry-run artifacts.
 
-Must be imported (or run) before anything else initializes jax — it pulls
-in ``repro.launch.dryrun`` first, which pins 512 placeholder devices.
+The cell path (``--arch``/``--all``) must run before anything else
+initializes jax — it pulls in ``repro.launch.dryrun``, which pins 512
+placeholder devices via XLA_FLAGS.  That import is lazy (``_dryrun()``)
+so the ``--paged-attn`` mode, and callers like ``serve_bench`` that
+already hold an initialized backend, can import this module without
+the device-count side effect.
 
 Accounting methodology (see EXPERIMENTS.md §Roofline):
 
@@ -20,8 +24,6 @@ Hardware model (TPU v5e): 197 bf16 TFLOP/s, 819 GB/s HBM, ~50 GB/s/link
 ICI.  Collective shapes in the partitioned HLO are per-device, so
 ``collective term = local_collective_bytes / link_bw``.
 """
-import repro.launch.dryrun as DR  # noqa: E402  (sets XLA_FLAGS first)
-
 import argparse
 import json
 from typing import Any, Dict, Optional
@@ -30,6 +32,15 @@ import numpy as np
 
 from repro.arch.config import SHAPES
 from repro.configs import ARCH_IDS, get_config
+
+
+def _dryrun():
+    """Import the dry-run toolchain on first use.  Side effect: pins
+    512 placeholder devices (XLA_FLAGS) — call before jax initializes,
+    and never from the paged-attn path."""
+    import repro.launch.dryrun as DR
+    return DR
+
 
 PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9  # bytes/s / chip
@@ -70,6 +81,7 @@ def measure_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                  overrides: Optional[Dict[str, Any]] = None,
                  verbose: bool = True) -> Dict[str, Any]:
     """Roofline terms for one cell via unrolled-variant extrapolation."""
+    DR = _dryrun()
     overrides = dict(overrides or {})
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
@@ -156,6 +168,76 @@ def measure_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     return out
 
 
+def measure_paged_attention(*, verbose: bool = True) -> Dict[str, Any]:
+    """HBM bytes per decoded token, jnp gather path vs the Pallas
+    paged-attention kernel, at a serve-decode-shaped cell.
+
+    The jnp side is *measured*: XLA ``cost_analysis()`` of the jitted
+    ``"jnp"`` backend (which materializes the gathered logical view,
+    its dequant, and the GQA head expansion in HBM).  The kernel side
+    is the exact DMA model from its BlockSpec geometry
+    (``paged_attention_hbm_bytes`` — every mapped page crosses HBM
+    exactly once, dequant/expansion happen in VMEM).  Both are
+    deterministic byte accountings, so ``reduction`` is a hard CI gate
+    (``check_regression``), not a timing measurement.
+    """
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.paged_attention import paged_attention_hbm_bytes
+    from repro.nn import attn_backend as AB
+
+    B, C, H, KV, hd = 8, 1, 8, 2, 64
+    page, n_ps = 16, 16
+    N = B * n_ps
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(0, 1, (B, C, H, hd)), jnp.float32)
+    tbl = jnp.asarray(rng.permutation(N).reshape(B, n_ps).astype(np.int32))
+    pos = jnp.full((B, C), n_ps * page - 1, jnp.int32)
+    out: Dict[str, Any] = {
+        "shape": {"B": B, "C": C, "H": H, "KV": KV, "hd": hd,
+                  "page": page, "pages_per_req": n_ps},
+    }
+    for name, quantized in (("fp32", False), ("int8", True)):
+        if quantized:
+            kv = AB.PagedKV(
+                k=jnp.zeros((N, page, KV, hd), jnp.int8),
+                v=jnp.zeros((N, page, KV, hd), jnp.int8),
+                k_scale=jnp.ones((N, page, KV, 1), jnp.float32),
+                v_scale=jnp.ones((N, page, KV, 1), jnp.float32))
+            pool_bytes = 1
+        else:
+            kv = AB.PagedKV(k=jnp.zeros((N, page, KV, hd), jnp.float32),
+                            v=jnp.zeros((N, page, KV, hd), jnp.float32))
+            pool_bytes = 4
+        kv = kv.with_view(tbl, pos, None, None)
+        fn = jax.jit(functools.partial(AB.get("jnp"), n_heads=H,
+                                       head_dim=hd, window=jnp.int32(0)))
+        ca = fn.lower(q, kv).compile().cost_analysis()
+        if isinstance(ca, (list, tuple)):  # older jax returns [dict]
+            ca = ca[0]
+        jnp_bytes = float(ca.get("bytes accessed", 0.0))
+        kernel_bytes = float(paged_attention_hbm_bytes(
+            B=B, C=C, H=H, KV=KV, hd=hd, n_ps=n_ps, page=page,
+            pool_bytes=pool_bytes, quantized=quantized, act_bytes=4))
+        tokens = B * C
+        entry = {
+            "jnp_bytes_per_token": jnp_bytes / tokens,
+            "kernel_bytes_per_token": kernel_bytes / tokens,
+            "reduction": (jnp_bytes / kernel_bytes if kernel_bytes
+                          else 0.0),
+        }
+        out[name] = entry
+        if verbose:
+            print(f"paged-attn {name:5s}: jnp "
+                  f"{entry['jnp_bytes_per_token']:12.0f} B/token  kernel "
+                  f"{entry['kernel_bytes_per_token']:12.0f} B/token  "
+                  f"reduction {entry['reduction']:6.2f}x")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -164,7 +246,24 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--out", default=None)
     ap.add_argument("--moe-impl", default="dense")
+    ap.add_argument("--paged-attn", action="store_true",
+                    help="measure paged-attention HBM bytes/token "
+                         "(jnp gather vs Pallas kernel DMA model) "
+                         "instead of arch×shape cells")
     args = ap.parse_args()
+    if args.paged_attn:
+        res = measure_paged_attention()
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(res, f, indent=1)
+        bad = [k for k in ("fp32", "int8")
+               if res[k]["reduction"] <= 1.0]
+        if bad:
+            print(f"FAIL: kernel does not undercut the jnp gather "
+                  f"path's HBM bytes/token for {bad}")
+            raise SystemExit(1)
+        return
+    DR = _dryrun()
     cells = []
     if args.all:
         for arch in ARCH_IDS:

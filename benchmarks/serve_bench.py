@@ -544,9 +544,8 @@ def _bench_shared_prefix(cfg, params, gate, ds, kw):
     sharing_gain = shared["prefix_tokens_per_page"]
 
     # fixed-byte slot math: page bytes measured from real allocations
-    fp_pb = sum(int(x.nbytes) for x in M.init_paged_kv(cfg, 1, page))
-    i8_pb = sum(int(x.nbytes)
-                for x in M.init_paged_kv(cfg, 1, page, kv_dtype="int8"))
+    fp_pb = M.init_paged_kv(cfg, 1, page).nbytes
+    i8_pb = M.init_paged_kv(cfg, 1, page, kv_dtype="int8").nbytes
     budget = pages * fp_pb
     pages_i8 = budget // i8_pb
     slots_fp = pages // demand
@@ -750,6 +749,14 @@ def main(quick: bool = True, smoke: bool = False, mesh_spec: str = None,
         fkw = dict(requests=requests, max_tokens=max_tokens,
                    batch=batch, cache_len=cache_len)
         result["faults"] = _bench_faults(cfg, params, gate, ds, fkw)
+
+    # paged-attention HBM roofline: deterministic byte accounting (no
+    # timing) for the jnp gather path vs the Pallas kernel's DMA model,
+    # gated hard by check_regression (reduction must stay > 1)
+    from benchmarks.roofline import measure_paged_attention
+    from repro.nn import attn_backend as AB
+    result["paged_attention"] = measure_paged_attention(verbose=False)
+    result["paged_attention"]["attn_impl"] = AB.resolve("auto")
 
     with open(out, "w") as f:
         json.dump(result, f, indent=2)

@@ -11,6 +11,7 @@ Param dtype is f32 master; compute casts to bf16 at the embedding.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -18,7 +19,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..nn import attention as A
+from ..nn import attn_backend as AB
 from ..nn import recurrent as R
+from ..nn.attn_backend import PagedKV
 from ..nn.common import dense_init, embed_init, rms_norm, split_keys
 from ..nn.mlp import init_mlp, mlp_block
 from ..nn.moe import init_moe, moe_block, moe_block_sparse
@@ -437,22 +440,23 @@ def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int,
 
 
 def init_paged_kv(cfg: ArchConfig, n_pages: int, page_size: int,
-                  kv_dtype: str = "bf16") -> Tuple:
+                  kv_dtype: str = "bf16") -> PagedKV:
     """Allocate the physical page pool for the paged KV cache.
 
-    Returns ``(k_pages, v_pages)``, each ``[n_layers, n_pages, page,
-    KV, hd]``.  Unlike the dense ``[B, cache_len]`` cache, memory scales
-    with the *pool*, not slots x max length — a block table per slot
-    maps logical positions to pages, so short requests pin only the
-    pages they reserve and freed pages recycle to the next admission.
-    Dense-family stacks only (hybrid/enc-dec decode keeps the dense
-    cache).
+    Returns a pool-level :class:`~repro.nn.attn_backend.PagedKV` whose
+    ``k``/``v`` pools are ``[n_layers, n_pages, page, KV, hd]`` (view
+    fields ``None``).  Unlike the dense ``[B, cache_len]`` cache,
+    memory scales with the *pool*, not slots x max length — a block
+    table per slot maps logical positions to pages, so short requests
+    pin only the pages they reserve and freed pages recycle to the next
+    admission.  Dense-family stacks only (hybrid/enc-dec decode keeps
+    the dense cache).
 
     ``kv_dtype='int8'`` quantizes the pool (the paged analogue of the
-    dense int8 cache): returns ``(k_pages, v_pages, k_scales,
-    v_scales)`` with int8 value pools plus f32 per-page scale planes
-    ``[n_layers, n_pages, page, KV, 1]`` — the pool holds ~2x more
-    tokens per byte at the ``quantize_kv_int8`` round-trip bound.
+    dense int8 cache): int8 value pools plus f32 per-page scale planes
+    ``[n_layers, n_pages, page, KV, 1]`` in ``k_scale``/``v_scale`` —
+    the pool holds ~2x more tokens per byte at the
+    ``quantize_kv_int8`` round-trip bound.
     """
     if cfg.block_pattern or cfg.family == "encdec":
         raise ValueError("paged KV cache supports dense attention "
@@ -461,16 +465,19 @@ def init_paged_kv(cfg: ArchConfig, n_pages: int, page_size: int,
              cfg.head_dim_)
     if kv_dtype == "int8":
         sshape = shape[:-1] + (1,)
-        return (jnp.zeros(shape, jnp.int8), jnp.zeros(shape, jnp.int8),
-                jnp.zeros(sshape, jnp.float32),
-                jnp.zeros(sshape, jnp.float32))
-    return (jnp.zeros(shape, COMPUTE_DTYPE), jnp.zeros(shape, COMPUTE_DTYPE))
+        return PagedKV(k=jnp.zeros(shape, jnp.int8),
+                       v=jnp.zeros(shape, jnp.int8),
+                       k_scale=jnp.zeros(sshape, jnp.float32),
+                       v_scale=jnp.zeros(sshape, jnp.float32))
+    return PagedKV(k=jnp.zeros(shape, COMPUTE_DTYPE),
+                   v=jnp.zeros(shape, COMPUTE_DTYPE))
 
 
-def paged_decode_step(params, kv: Tuple, block_tbl, pos, tokens, n_new,
+def paged_decode_step(params, kv, block_tbl, pos, tokens, n_new,
                       cfg: ArchConfig, *, moe_impl: str = "dense",
-                      unroll: bool = False,
-                      sample_greedy: bool = False) -> Tuple[jax.Array, Tuple]:
+                      unroll: bool = False, sample_greedy: bool = False,
+                      attn_impl: str = "jnp",
+                      ) -> Tuple[jax.Array, PagedKV]:
     """Chunked multi-token decode/prefill through the paged KV cache.
 
     ``tokens [B, C]`` carries up to ``C`` new tokens per slot
@@ -486,18 +493,39 @@ def paged_decode_step(params, kv: Tuple, block_tbl, pos, tokens, n_new,
     ``n_new[b] = 0`` marks an idle slot: its writes drop and its output
     row is garbage (finite), never read.
 
-    ``kv`` is the 2-tuple bf16 pool or the 4-tuple int8 pool (+ scale
-    planes) from ``init_paged_kv`` — the int8 path quantizes on write
-    and dequantizes inside the gathered attention, mirroring the dense
-    ``decode_step`` int8 cache.
+    ``kv`` is the pool-level :class:`~repro.nn.attn_backend.PagedKV`
+    from ``init_paged_kv`` (bf16, or int8 + scale planes — the int8
+    path quantizes on write and dequantizes inside the gathered
+    attention, mirroring the dense ``decode_step`` int8 cache).  The
+    pool scans as pytree xs: ``lax.scan`` slices each leaf per layer,
+    the body attaches the per-call view, and the updated per-layer
+    pools restack on the way out.  Legacy tuple pools
+    ``(k, v[, sk, sv])`` are accepted for one release (rewrapped with a
+    DeprecationWarning, returned in the same tuple shape).
+
+    ``attn_impl`` picks the attention backend
+    (``attn_backend.resolve``: ``'jnp'`` | ``'pallas'`` | ``'auto'``);
+    it is resolved once here, outside the scan, and never changes the
+    token stream (backends are gated bit-identical).
     """
-    int8 = len(kv) == 4
-    if int8:
-        k_pages, v_pages, k_scales, v_scales = kv
-    else:
-        k_pages, v_pages = kv
+    if not isinstance(kv, PagedKV):
+        warnings.warn(
+            "passing a (k_pages, v_pages[, k_scales, v_scales]) tuple to "
+            "paged_decode_step is deprecated; pass the PagedKV from "
+            "init_paged_kv", DeprecationWarning, stacklevel=2)
+        legacy = tuple(kv)
+        kv = PagedKV(*legacy) if len(legacy) == 4 else PagedKV(*legacy[:2])
+        out, new_kv = paged_decode_step(
+            params, kv, block_tbl, pos, tokens, n_new, cfg,
+            moe_impl=moe_impl, unroll=unroll, sample_greedy=sample_greedy,
+            attn_impl=attn_impl)
+        if len(legacy) == 4:
+            return out, (new_kv.k, new_kv.v, new_kv.k_scale, new_kv.v_scale)
+        return out, (new_kv.k, new_kv.v)
+    kv = kv.pool()  # stray view fields would confuse the layer scan
+    impl = AB.resolve(attn_impl)
     B, C = tokens.shape
-    N_pages, page = k_pages.shape[1], k_pages.shape[2]
+    N_pages, page = kv.k.shape[1], kv.k.shape[2]
     n_ps = block_tbl.shape[1]
     positions = pos[:, None] + jnp.arange(C)[None]  # [B, C] absolute
     valid = jnp.arange(C)[None] < n_new[:, None]
@@ -509,38 +537,20 @@ def paged_decode_step(params, kv: Tuple, block_tbl, pos, tokens, n_new,
     windows = jnp.asarray(layer_windows(cfg))
 
     def body(x, xs):
-        layer_p, ck, cv, w = xs
+        layer_p, kvl, w = xs
         h = rms_norm(x, layer_p["ln1"], cfg.norm_eps)
-        out, ck, cv = A.paged_decode_attention_block(
-            layer_p["mixer"], h, ck, cv, block_tbl, positions, page_ids,
-            page_off, n_heads=cfg.q_heads, n_kv_heads=cfg.n_kv_heads,
+        out, kvl = A.paged_decode_attention_block(
+            layer_p["mixer"], h,
+            kvl.with_view(block_tbl, positions, page_ids, page_off),
+            n_heads=cfg.q_heads, n_kv_heads=cfg.n_kv_heads,
             head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta, window=w,
-            qk_norm=cfg.qk_norm, norm_eps=cfg.norm_eps)
+            qk_norm=cfg.qk_norm, norm_eps=cfg.norm_eps, impl=impl)
         x = x + out
         x, _ = _ffn(layer_p, cfg, x, moe_impl)
-        return x, (ck, cv)
+        return x, kvl.pool()
 
-    def body8(x, xs):
-        layer_p, ck, cv, sk, sv, w = xs
-        h = rms_norm(x, layer_p["ln1"], cfg.norm_eps)
-        out, ck, cv, (sk, sv) = A.paged_decode_attention_block(
-            layer_p["mixer"], h, ck, cv, block_tbl, positions, page_ids,
-            page_off, n_heads=cfg.q_heads, n_kv_heads=cfg.n_kv_heads,
-            head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta, window=w,
-            qk_norm=cfg.qk_norm, norm_eps=cfg.norm_eps,
-            kv_scales=(sk, sv))
-        x = x + out
-        x, _ = _ffn(layer_p, cfg, x, moe_impl)
-        return x, (ck, cv, sk, sv)
-
-    if int8:
-        x, new_kv = jax.lax.scan(
-            body8, x, (params["layers"], k_pages, v_pages, k_scales,
-                       v_scales, windows), unroll=unroll)
-    else:
-        x, new_kv = jax.lax.scan(
-            body, x, (params["layers"], k_pages, v_pages, windows),
-            unroll=unroll)
+    x, new_kv = jax.lax.scan(
+        body, x, (params["layers"], kv, windows), unroll=unroll)
     # select each slot's last valid position BEFORE the vocab
     # projection: the head is the dominant decode matmul and only one
     # chunk position per slot is kept (rms_norm + einsum are

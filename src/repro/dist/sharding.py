@@ -249,7 +249,16 @@ def paged_cache_pspec(leaf, mesh) -> P:
 
 
 def paged_kv_shardings(kv, mesh):
-    """NamedShardings for the ``(k_pages, v_pages)`` page pool."""
+    """NamedShardings for a page pool.
+
+    ``kv`` is any pytree of pool leaves — canonically the
+    :class:`repro.nn.attn_backend.PagedKV` dataclass from
+    ``model.init_paged_kv`` (``k``/``v`` pools, optional int8
+    ``k_scale``/``v_scale`` planes; ``None`` view fields contribute no
+    leaves) — but legacy ``(k_pages, v_pages[, scales])`` tuples map
+    the same way.  Every 5-D leaf follows ``paged_cache_pspec``; the
+    scale planes' trailing dim of 1 simply never matches ``model``.
+    """
     from jax.sharding import NamedSharding
 
     return jax.tree_util.tree_map(

@@ -1,0 +1,197 @@
+"""Pallas paged-attention: fused block-table walk + dequant + attend.
+
+The jnp serve path materializes the paged cache's *logical* view in
+HBM every layer of every decode step: ``k_pages[block_tbl]`` writes a
+``[B, n_ps*page, KV, hd]`` gather (then reads it back), the int8 path
+adds a dequant round trip, and ``repeat_kv`` multiplies the read
+traffic by ``H/KV`` for GQA stacks.  For decode (1 query token) that
+gather traffic *is* the roofline — see ``benchmarks/roofline.py
+--paged-attn`` for the measured bytes.
+
+This kernel fuses the whole read side into one launch.  A scalar-
+prefetch grid ``(B, n_ps)`` walks each slot's block table page by
+page: the prefetched (clipped) table drives the K/V ``BlockSpec``
+index maps, so each physical page is DMA'd HBM->VMEM exactly once, at
+pool dtype, dequantized (int8 pools: per-page f32 scale planes ride
+along and the multiply happens in registers) and staged into a
+VMEM-resident logical view; the final grid step over a slot runs
+masking + softmax + the value einsum entirely out of VMEM.  Nothing
+per-``S`` ever touches HBM: no gathered view, no dequantized copy, no
+``H/KV``-repeated K/V — HBM cost per slot is ``n_ps*page*KV*hd`` pool
+bytes (+ scale planes) plus q/out.
+
+Deliberate deviation from flash-style *online* softmax: the softmax
+runs full-axis over the VMEM-staged view, with bitwise the same
+operations as the jnp oracle.  Online rescaling re-associates the
+reduction and cannot be bit-exact, and this repo's serving contract is
+bit-exactness (token streams are hard-gated identical across batchers,
+meshes, chunk widths and now backends).  HBM traffic is identical
+either way — each pool page is read once — what online softmax would
+buy is O(page) instead of O(S) VMEM residency, which matters only past
+``S*KV*hd ~ 1M`` elements; revisit when contexts outgrow VMEM.
+
+Masking is ``attn_backend.position_mask`` on per-slot absolute
+positions — the *same helper object* the jnp oracle and the dense
+decode path call — so page-boundary behaviour cannot drift between
+implementations.
+
+Decode is the ``C=1`` case of the prefill-chunk ``[B, C]`` variant;
+one kernel serves both (the chunk width only changes block shapes).
+
+Exposed through the ``repro.nn.attn_backend`` registry as
+``"pallas"``; ``interpret=None`` auto-selects interpret mode off-TPU
+so CPU CI executes the same kernel the TPU path compiles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..nn.attn_backend import position_mask, repeat_kv
+
+__all__ = ["paged_attention", "paged_attention_hbm_bytes"]
+
+
+def _kernel(n_batch: int, n_ps: int, page: int, n_heads: int,
+            quantized: bool, out_dtype, tbl_ref, pos_ref, win_ref, q_ref,
+            kp_ref, vp_ref, *rest):
+    """One grid step ``(b, s)``: stage slot b's logical page s into the
+    batch-wide VMEM view; on the last grid step, attend over all slots.
+
+    ``tbl_ref``/``pos_ref``/``win_ref`` are scalar-prefetch operands
+    (the clipped block table also drives the K/V BlockSpec index maps,
+    which is what makes the gather a sequence of page DMAs instead of
+    an HBM materialization).  The attend runs *once*, over the full
+    ``[B, S]`` staged view, so its einsums/softmax see exactly the
+    shapes the jnp oracle lowers — per-slot attends would hit
+    shape-dependent reduction blocking and drift by ulps, breaking the
+    bitwise contract."""
+    if quantized:
+        ks_ref, vs_ref, out_ref, kg, vg = rest
+    else:
+        out_ref, kg, vg = rest
+    b = pl.program_id(0)
+    s = pl.program_id(1)
+    sl = pl.ds(s * page, page)
+    if quantized:
+        # dequant in-flight: int8 page * f32 scale plane -> compute dtype
+        kg[b, sl] = kp_ref[0].astype(out_dtype) * ks_ref[0].astype(out_dtype)
+        vg[b, sl] = vp_ref[0].astype(out_dtype) * vs_ref[0].astype(out_dtype)
+    else:
+        kg[b, sl] = kp_ref[0].astype(out_dtype)
+        vg[b, sl] = vp_ref[0].astype(out_dtype)
+
+    @pl.when((b == n_batch - 1) & (s == n_ps - 1))
+    def _attend():  # VMEM view complete — same ops/shapes as the oracle
+        B, S = n_batch, n_ps * page
+        hd = q_ref.shape[-1]
+        qb = q_ref[...]
+        # scratch Refs must be loaded before use in jnp ops
+        kf = repeat_kv(kg[...], n_heads)
+        vf = repeat_kv(vg[...], n_heads)
+        k_pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        mask = position_mask(pos_ref[...], k_pos, win_ref[0], causal=True)
+        sc = jnp.einsum("bqhd,bshd->bhqs", qb, kf) / np.sqrt(hd)
+        sc = sc.astype(jnp.float32) + mask[:, None, :, :]
+        probs = jax.nn.softmax(sc, axis=-1).astype(out_dtype)
+        out_ref[...] = jnp.einsum("bhqs,bshd->bqhd", probs, vf)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    block_tbl: jax.Array, positions: jax.Array, window,
+                    *, k_scale: Optional[jax.Array] = None,
+                    v_scale: Optional[jax.Array] = None,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Attend ``q [B, C, H, hd]`` over a paged pool through its block
+    table.  Bitwise-identical to the registered ``"jnp"`` backend on
+    the same operands (asserted in ``tests/test_kernels.py``).
+
+    Args:
+      q: projected queries, rope applied, ``[B, C, H, hd]`` (``C=1``
+        for pure decode, ``C>1`` for a prefill chunk).
+      k_pages/v_pages: physical pool ``[N_pages, page, KV, hd]``
+        (bf16/f32, or int8 with ``k_scale``/``v_scale`` planes
+        ``[N_pages, page, KV, 1]``).
+      block_tbl: ``[B, n_ps]`` logical->physical page map (entries may
+        exceed the pool; they are clipped exactly like the oracle's
+        gather — stale reads are masked by the causal term).
+      positions: ``[B, C]`` int32 absolute position per chunk slot.
+      window: per-layer scalar (0 = full) — may be traced (stacked
+        layer scan), hence passed as a scalar-prefetch operand.
+      interpret: force Pallas interpret mode; ``None`` auto-selects it
+        off-TPU (CPU CI runs this exact kernel interpreted).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, C, H, hd = q.shape
+    N_pages, page, KV, _ = k_pages.shape
+    n_ps = block_tbl.shape[1]
+    S = n_ps * page
+    dt = q.dtype
+    quantized = k_scale is not None
+
+    gtbl = jnp.clip(block_tbl, 0, N_pages - 1).astype(jnp.int32)
+    pos = positions.astype(jnp.int32)
+    win = jnp.asarray(window, jnp.int32).reshape(1)
+
+    def page_map(b, s, tbl, *_):
+        return (tbl[b, s], 0, 0, 0)
+
+    def whole_map(b, s, *_):
+        return (0, 0, 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((B, C, H, hd), whole_map),           # q
+        pl.BlockSpec((1, page, KV, hd), page_map),        # k_pages
+        pl.BlockSpec((1, page, KV, hd), page_map),        # v_pages
+    ]
+    operands = [q, k_pages, v_pages]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, page, KV, 1), page_map),     # k_scale
+            pl.BlockSpec((1, page, KV, 1), page_map),     # v_scale
+        ]
+        operands += [k_scale, v_scale]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # gtbl, pos, win
+        grid=(B, n_ps),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((B, C, H, hd), whole_map),
+        scratch_shapes=[pltpu.VMEM((B, S, KV, hd), dt),   # staged K view
+                        pltpu.VMEM((B, S, KV, hd), dt)],  # staged V view
+    )
+    kern = functools.partial(_kernel, B, n_ps, page, H, quantized, dt)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, C, H, hd), dt),
+        interpret=interpret,
+    )(gtbl, pos, win, *operands)
+
+
+def paged_attention_hbm_bytes(B: int, C: int, H: int, KV: int, hd: int,
+                              n_ps: int, page: int, *, pool_bytes: int,
+                              quantized: bool, act_bytes: int) -> int:
+    """Exact HBM bytes one kernel launch moves, from BlockSpec geometry.
+
+    This is arithmetic, not a model: the grid DMAs each of the
+    ``B*n_ps`` table-selected K and V pages (+ scale planes when
+    quantized) exactly once at pool dtype, plus the q block in and the
+    out block back.  ``benchmarks/roofline.py --paged-attn`` divides
+    this by decoded tokens and compares against the measured jnp-path
+    bytes (XLA cost analysis) for the same shapes.
+    """
+    page_cells = page * KV * hd
+    kv_bytes = 2 * B * n_ps * page_cells * pool_bytes
+    scale_bytes = 2 * B * n_ps * page * KV * 4 if quantized else 0
+    q_out = 2 * B * C * H * hd * act_bytes
+    prefetch = (B * n_ps + B * C + 1) * 4
+    return kv_bytes + scale_bytes + q_out + prefetch

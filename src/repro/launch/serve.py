@@ -79,6 +79,14 @@ def main(argv=None):
                          "scale planes (~2x pool tokens per byte at "
                          "the quantize round-trip bound); needs "
                          "--page-size")
+    ap.add_argument("--attn-impl", default="auto",
+                    choices=["auto", "jnp", "pallas"],
+                    help="paged-attention backend (repro.nn.attn_backend "
+                         "registry): auto = Pallas page-walking kernel "
+                         "on TPU / jnp gather oracle elsewhere; "
+                         "'pallas' off-TPU runs the kernel in interpret "
+                         "mode (slow, correctness checks only).  Token "
+                         "streams are bit-identical across backends")
     ap.add_argument("--shared-prefix-len", type=int, default=0,
                     help="workload: prepend this many common prefix "
                          "tokens to every prompt (exercises "
@@ -167,7 +175,11 @@ def main(argv=None):
     scfg = ServeConfig(max_batch=args.batch, cache_len=64,
                        page_size=args.page_size, pages=args.pages,
                        share_prefix=args.share_prefix,
-                       kv_int8=args.kv_int8)
+                       kv_int8=args.kv_int8, attn_impl=args.attn_impl)
+    if args.page_size:
+        from ..nn import attn_backend as AB
+        print(f"paged attention backend: {args.attn_impl} "
+              f"-> {AB.resolve(args.attn_impl)}")
 
     # wrap around the test set so any --requests count is serveable
     feats = ds.X_test[np.arange(args.requests) % len(ds.X_test)]

@@ -15,15 +15,18 @@ One implementation serves every assigned arch:
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+import dataclasses
+import warnings
+from typing import Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import attn_backend as AB
+from .attn_backend import NEG_INF, PagedKV
 from .common import apply_rope, dense_init, rms_norm, split_keys
 
-NEG_INF = -2.0**30
 DEFAULT_Q_BLOCK = 512
 
 
@@ -71,24 +74,11 @@ def _project_qkv(p: Dict, x: jax.Array, n_heads: int, n_kv_heads: int,
     return q, k, v
 
 
-def _repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
-    """[B,S,KV,hd] -> [B,S,H,hd] by group broadcast (TP-friendly heads)."""
-    B, S, KV, hd = k.shape
-    if KV == n_heads:
-        return k
-    reps = n_heads // KV
-    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, KV, reps, hd)).reshape(
-        B, S, n_heads, hd)
-
-
-def _mask_block(q_pos: jax.Array, k_pos: jax.Array, window, causal: bool):
-    """Additive mask [..., qb, Sk] from positions; window scalar, 0=full."""
-    diff = q_pos[..., :, None] - k_pos[..., None, :]
-    ok = jnp.ones(diff.shape, bool)
-    if causal:
-        ok = ok & (diff >= 0)
-    ok = ok & ((window <= 0) | (diff < window))
-    return jnp.where(ok, 0.0, NEG_INF)
+# shared position primitives live in attn_backend (the kernel and the
+# dense/paged/blocked paths must mask identically); aliased here for
+# the long-standing call sites and tests
+_repeat_kv = AB.repeat_kv
+_mask_block = AB.position_mask
 
 
 def attend_blocked(q: jax.Array, k: jax.Array, v: jax.Array,
@@ -195,16 +185,40 @@ def quantize_kv_int8(t: jax.Array) -> Tuple[jax.Array, jax.Array]:
     return q.astype(jnp.int8), scale
 
 
+def _paged_write(kv: PagedKV, k: jax.Array, v: jax.Array) -> PagedKV:
+    """Scatter a chunk's projected K/V into their physical pages.
+
+    Shared verbatim by every attention backend — the write half is not
+    part of the backend contract, so the returned pools are bitwise
+    identical no matter which implementation attends afterwards.
+    Out-of-range ``page_ids`` drop the write (padded chunk slots).
+    The int8 pool quantizes per token vector and scatters the f32
+    scale planes alongside the values.
+    """
+    if kv.quantized:
+        kq, ks = quantize_kv_int8(k)
+        vq, vs = quantize_kv_int8(v)
+        return dataclasses.replace(
+            kv,
+            k=kv.k.at[kv.page_ids, kv.page_off].set(kq, mode="drop"),
+            v=kv.v.at[kv.page_ids, kv.page_off].set(vq, mode="drop"),
+            k_scale=kv.k_scale.at[kv.page_ids, kv.page_off].set(
+                ks.astype(kv.k_scale.dtype), mode="drop"),
+            v_scale=kv.v_scale.at[kv.page_ids, kv.page_off].set(
+                vs.astype(kv.v_scale.dtype), mode="drop"))
+    return dataclasses.replace(
+        kv,
+        k=kv.k.at[kv.page_ids, kv.page_off].set(
+            k.astype(kv.k.dtype), mode="drop"),
+        v=kv.v.at[kv.page_ids, kv.page_off].set(
+            v.astype(kv.v.dtype), mode="drop"))
+
+
 def paged_decode_attention_block(
     p: Dict,
-    x: jax.Array,  # [B, C] chunk of current tokens' activations [B, C, D]
-    k_pages: jax.Array,  # [N_pages, page, KV, hd] physical page pool
-    v_pages: jax.Array,
-    block_tbl: jax.Array,  # [B, n_ps] logical page -> physical page
-    positions: jax.Array,  # [B, C] absolute position per chunk slot
-    page_ids: jax.Array,  # [B, C] physical page per new token (N = drop)
-    page_off: jax.Array,  # [B, C] within-page offset per new token
-    *,
+    x: jax.Array,  # [B, C, D] chunk of current tokens' activations
+    kv: Union[PagedKV, jax.Array],  # PagedKV with view fields set
+    *legacy_args,
     n_heads: int,
     n_kv_heads: int,
     head_dim: int,
@@ -212,88 +226,101 @@ def paged_decode_attention_block(
     window,
     qk_norm: bool,
     norm_eps: float,
-    kv_scales: Optional[Tuple[jax.Array, jax.Array]] = None,  # int8 pages
+    kv_scales: Optional[Tuple[jax.Array, jax.Array]] = None,  # legacy only
+    impl: str = "jnp",
 ) -> Tuple:
     """Chunked decode attention through a paged (block-table) KV cache.
 
     The serve-path analogue of ``decode_attention_block`` for the paged
-    cache: the chunk's K/V are scattered into their physical pages
-    (``page_ids``/``page_off``, precomputed once per step by the caller
-    and shared across layers; out-of-range ids drop the write, which is
-    how padded chunk slots are masked), then every query attends over
-    the *logical* view ``k_pages[block_tbl]`` — pages gathered in
-    logical order, so cell ``i`` of the gathered axis holds absolute
-    position ``i`` exactly like the dense cache holds position
-    ``i`` before its ring wraps.  Masking reuses ``_mask_block`` on the
-    per-slot absolute positions, which makes it correct at page
-    boundaries by construction: a chunk straddling two pages masks on
-    positions, not on page geometry.  Unwritten/stale cells (recycled
-    pages) are killed by the causal term — a key cell is attended only
-    when ``k_pos <= q_pos``, and every position ``<= q_pos`` of the
-    owning slot has been written through its own table entry.
+    cache.  ``kv`` is a :class:`~repro.nn.attn_backend.PagedKV` with
+    its per-call view attached (``kv.with_view(block_tbl, positions,
+    page_ids, page_off)`` — the scatter coordinates are precomputed
+    once per step by the caller and shared across layers).  The chunk's
+    K/V are scattered into their physical pages (out-of-range ids drop
+    the write, which is how padded chunk slots are masked), then every
+    query attends over the *logical* view ``k_pages[block_tbl]`` —
+    pages gathered in logical order, so cell ``i`` of the gathered axis
+    holds absolute position ``i`` exactly like the dense cache holds
+    position ``i`` before its ring wraps.  Masking uses the shared
+    ``attn_backend.position_mask`` on the per-slot absolute positions,
+    which makes it correct at page boundaries by construction: a chunk
+    straddling two pages masks on positions, not on page geometry.
+    Unwritten/stale cells (recycled pages) are killed by the causal
+    term — a key cell is attended only when ``k_pos <= q_pos``, and
+    every position ``<= q_pos`` of the owning slot has been written
+    through its own table entry.
+
+    ``impl`` selects the attention backend (``attn_backend.resolve``:
+    ``'jnp'`` gather oracle, ``'pallas'`` page-walking kernel,
+    ``'auto'`` = platform default).  The projection and the page write
+    run *outside* the backend, so the returned pools are bitwise
+    identical across impls, and registered backends are gated
+    bit-identical on fp pools — token streams do not depend on the
+    backend choice.
 
     Bit-exactness contract: for a chunk of width 1 starting at the same
     position, the gathered axis has the same length, values and mask as
     the (unwrapped) dense cache axis, so logits match the dense path
     bit for bit (asserted by tests/test_serve.py).
 
-    ``kv_scales`` enables the **int8 page pool**: K/V are quantized per
-    token vector (``quantize_kv_int8``) on write, the f32 scale planes
-    (``[N_pages, page, KV, 1]``) scatter alongside the values, and the
-    gathered logical view dequantizes before the score einsum — the
-    serve-path analogue of ``decode_attention_block``'s int8 cache, at
-    the same ``<= scale/2`` round-trip bound.  Shared (prefix) pages
-    need nothing special: quantization is deterministic, so a shared
-    page holds bit-identical content to what each sharer would have
-    written itself.  Returns ``(out, k_pages, v_pages, new_scales)``
-    when quantized, the 3-tuple otherwise.
+    A quantized ``kv`` (``k_scale``/``v_scale`` planes present) is the
+    **int8 page pool**: K/V quantize per token vector
+    (``quantize_kv_int8``) on write and the gather dequantizes before
+    the score einsum, at the same ``<= scale/2`` round-trip bound as
+    the dense int8 cache.  Shared (prefix) pages need nothing special:
+    quantization is deterministic, so a shared page holds bit-identical
+    content to what each sharer would have written itself.
+
+    Returns ``(out, new_kv)`` — ``new_kv`` keeps the caller's view
+    fields, so layer loops can thread it without rebuilding the view.
+
+    .. deprecated::
+        The pre-PagedKV call shape ``(p, x, k_pages, v_pages,
+        block_tbl, positions, page_ids, page_off, ...,
+        kv_scales=(sk, sv))`` still works for one release: it warns,
+        rewraps into ``PagedKV``, and returns the legacy
+        ``(out, k_pages, v_pages[, (sk, sv)])`` tuple.
     """
+    if not isinstance(kv, PagedKV):
+        if len(legacy_args) != 5:
+            raise TypeError(
+                "paged_decode_attention_block expects (p, x, PagedKV) or "
+                "the deprecated (p, x, k_pages, v_pages, block_tbl, "
+                f"positions, page_ids, page_off) shape; got kv={type(kv)} "
+                f"plus {len(legacy_args)} positional arguments")
+        warnings.warn(
+            "passing loose (k_pages, v_pages, block_tbl, positions, "
+            "page_ids, page_off[, kv_scales=...]) to "
+            "paged_decode_attention_block is deprecated; wrap the pool in "
+            "repro.nn.attn_backend.PagedKV and attach the view with "
+            ".with_view(block_tbl, positions, page_ids, page_off)",
+            DeprecationWarning, stacklevel=2)
+        v_pages, block_tbl, positions, page_ids, page_off = legacy_args
+        sk, sv = kv_scales if kv_scales is not None else (None, None)
+        wrapped = PagedKV(k=kv, v=v_pages, k_scale=sk, v_scale=sv,
+                          block_tbl=block_tbl, pos=positions,
+                          page_ids=page_ids, page_off=page_off)
+        out, new_kv = paged_decode_attention_block(
+            p, x, wrapped, n_heads=n_heads, n_kv_heads=n_kv_heads,
+            head_dim=head_dim, rope_theta=rope_theta, window=window,
+            qk_norm=qk_norm, norm_eps=norm_eps, impl=impl)
+        if kv_scales is not None:
+            return out, new_kv.k, new_kv.v, (new_kv.k_scale, new_kv.v_scale)
+        return out, new_kv.k, new_kv.v
+    if legacy_args:
+        raise TypeError("PagedKV carries the table/positions; extra "
+                        "positional arguments are not accepted")
+    if kv_scales is not None:
+        raise TypeError("kv_scales belongs to the deprecated call shape; "
+                        "a quantized PagedKV carries its own scale planes")
     B, C, _ = x.shape
-    N_pages, page = k_pages.shape[0], k_pages.shape[1]
-    n_ps = block_tbl.shape[1]
-    q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim, positions,
+    q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim, kv.pos,
                            rope_theta, qk_norm, norm_eps)
-    if kv_scales is not None:
-        sk_pool, sv_pool = kv_scales
-        kq, ks = quantize_kv_int8(k)
-        vq, vs = quantize_kv_int8(v)
-        k_pages = k_pages.at[page_ids, page_off].set(kq, mode="drop")
-        v_pages = v_pages.at[page_ids, page_off].set(vq, mode="drop")
-        sk_pool = sk_pool.at[page_ids, page_off].set(
-            ks.astype(sk_pool.dtype), mode="drop")
-        sv_pool = sv_pool.at[page_ids, page_off].set(
-            vs.astype(sv_pool.dtype), mode="drop")
-    else:
-        k_pages = k_pages.at[page_ids, page_off].set(
-            k.astype(k_pages.dtype), mode="drop")
-        v_pages = v_pages.at[page_ids, page_off].set(
-            v.astype(v_pages.dtype), mode="drop")
-    # logical view: pages gathered in table order -> [B, n_ps*page, KV, hd]
-    gtbl = jnp.clip(block_tbl, 0, N_pages - 1)
-    if kv_scales is not None:
-        kf = (k_pages[gtbl].astype(x.dtype)
-              * sk_pool[gtbl].astype(x.dtype)).reshape(
-                  B, n_ps * page, *k_pages.shape[2:])
-        vf = (v_pages[gtbl].astype(x.dtype)
-              * sv_pool[gtbl].astype(x.dtype)).reshape(
-                  B, n_ps * page, *v_pages.shape[2:])
-    else:
-        kf = k_pages[gtbl].reshape(B, n_ps * page, *k_pages.shape[2:])
-        vf = v_pages[gtbl].reshape(B, n_ps * page, *v_pages.shape[2:])
-    kf = _repeat_kv(kf.astype(x.dtype), n_heads)
-    vf = _repeat_kv(vf.astype(x.dtype), n_heads)
-    k_pos = jnp.broadcast_to(jnp.arange(n_ps * page)[None],
-                             (B, n_ps * page))
-    mask = _mask_block(positions, k_pos, window, causal=True)  # [B, C, S]
-    s = jnp.einsum("bqhd,bshd->bhqs", q, kf) / np.sqrt(head_dim)
-    s = s.astype(jnp.float32) + mask[:, None, :, :]
-    probs = jax.nn.softmax(s, axis=-1).astype(x.dtype)
-    out = jnp.einsum("bhqs,bshd->bqhd", probs, vf).reshape(
-        B, C, n_heads * head_dim)
-    out = out @ p["wo"].astype(x.dtype)
-    if kv_scales is not None:
-        return out, k_pages, v_pages, (sk_pool, sv_pool)
-    return out, k_pages, v_pages
+    kv = _paged_write(kv, k, v)
+    attend = AB.get(AB.resolve(impl))
+    out = attend(q, kv, n_heads=n_heads, head_dim=head_dim, window=window)
+    out = out.reshape(B, C, n_heads * head_dim) @ p["wo"].astype(x.dtype)
+    return out, kv
 
 
 def decode_attention_block(
@@ -356,9 +383,16 @@ def decode_attention_block(
     wraps = (pos // S_max)
     abs_pos = jnp.where(idx <= slot, idx + wraps * S_max,
                         idx + (wraps - 1) * S_max)
-    valid = (abs_pos >= 0) & (abs_pos <= pos)
-    in_window = (window <= 0) | (abs_pos > pos - window)
-    mask = jnp.where(valid & in_window, 0.0, NEG_INF)[None, :]  # [1,S]
+    # once unwrapped to absolute positions, the ring shares the paged
+    # path's mask helper (causal = abs_pos <= pos, window on the same
+    # diff); the one ring-specific term is the abs_pos >= 0 guard —
+    # pre-wrap cells sit at negative positions, which the causal diff
+    # alone would wrongly admit
+    mask = jnp.where(
+        abs_pos[None] >= 0,
+        AB.position_mask(jnp.asarray(pos, jnp.int32)[None, None],
+                         abs_pos[None], window, causal=True)[:, 0],
+        NEG_INF)  # [1,S]
     if gqa_impl == "grouped":
         KV = n_kv_heads
         G = n_heads // KV

@@ -1,0 +1,264 @@
+"""Attention-backend registry and the ``PagedKV`` cache pytree.
+
+Two things live here, both shared by every paged-attention
+implementation so they cannot drift apart:
+
+* **position primitives** — ``position_mask`` (the single source of
+  truth for causal + sliding-window masking, used by dense decode, the
+  blocked prefill path, the jnp paged gather AND the Pallas kernel) and
+  ``repeat_kv`` (GQA group broadcast);
+* **the backend registry** — paged decode attention now has two
+  implementations (the jnp gather oracle and the Pallas page-walking
+  kernel), selected by name.  ``resolve("auto")`` mirrors
+  ``MappedModel.select_backend``: Pallas on TPU, the jnp oracle
+  everywhere else (where the kernel still runs, in interpret mode, but
+  only as a correctness vehicle, not a fast path).
+
+A backend is a callable ``fn(q, kv, *, n_heads, head_dim, window) ->
+[B, C, H, hd]`` that attends the already-projected queries over an
+already-written :class:`PagedKV` (pools updated, view fields set).  The
+scatter/write half of the step is *not* part of the backend contract —
+it runs once in ``nn.attention.paged_decode_attention_block`` so the
+returned pools are bitwise identical no matter which backend attends.
+
+Every registered backend must match the jnp oracle **bit for bit** on
+fp pools (asserted across page sizes / chunk widths / GQA ratios in
+``tests/test_kernels.py``); serving leans on that to keep token streams
+identical across ``--attn-impl`` settings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -2.0**30
+
+# --------------------------------------------------------------------
+# shared position primitives
+# --------------------------------------------------------------------
+
+
+def position_mask(q_pos: jax.Array, k_pos: jax.Array, window,
+                  causal: bool) -> jax.Array:
+    """Additive mask ``[..., qb, Sk]`` from absolute positions.
+
+    ``window`` is a per-layer *scalar* (0 = full attention) so mixed
+    local:global stacks stay scannable.  Masking on positions — never
+    on page or ring geometry — is what makes every caller correct at
+    page boundaries by construction: a chunk straddling two pages, or a
+    ring cell that wrapped, is masked by where it *is* in the sequence,
+    not where it lives in memory.
+    """
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = jnp.ones(diff.shape, bool)
+    if causal:
+        ok = ok & (diff >= 0)
+    ok = ok & ((window <= 0) | (diff < window))
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """[B,S,KV,hd] -> [B,S,H,hd] by group broadcast (TP-friendly heads)."""
+    B, S, KV, hd = k.shape
+    if KV == n_heads:
+        return k
+    reps = n_heads // KV
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, KV, reps, hd)).reshape(
+        B, S, n_heads, hd)
+
+
+# --------------------------------------------------------------------
+# the PagedKV pytree
+# --------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PagedKV:
+    """The paged KV cache as one typed pytree.
+
+    Replaces the loose ``(k_pages, v_pages[, (k_scales, v_scales)])``
+    tuples + four positional table/position arguments that previously
+    threaded through every paged call site.  Two granularities share
+    the type:
+
+    * **pool-level** (what ``model.init_paged_kv`` returns and the
+      donated serve state carries): ``k``/``v`` are
+      ``[n_layers, N_pages, page, KV, hd]`` physical pools, int8 pools
+      add f32 ``k_scale``/``v_scale`` planes ``[..., KV, 1]``; all view
+      fields are ``None``.
+    * **per-layer + per-call view** (what one attention call sees):
+      pool leaves without the layer axis, plus ``block_tbl [B, n_ps]``
+      (logical page -> physical page), ``pos [B, C]`` (absolute
+      position per chunk slot), and the precomputed scatter coordinates
+      ``page_ids``/``page_off [B, C]`` (out-of-range ids drop the
+      write — how padded chunk slots are masked).
+
+    ``None`` fields contribute no pytree leaves, so pool-level
+    instances flow through ``jax.tree.map`` (page copy-on-write),
+    ``lax.scan`` (per-layer slicing), buffer donation and
+    ``NamedSharding`` trees exactly like the old tuples did.
+    """
+
+    k: jax.Array
+    v: jax.Array
+    k_scale: Optional[jax.Array] = None
+    v_scale: Optional[jax.Array] = None
+    block_tbl: Optional[jax.Array] = None
+    pos: Optional[jax.Array] = None
+    page_ids: Optional[jax.Array] = None
+    page_off: Optional[jax.Array] = None
+
+    @property
+    def quantized(self) -> bool:
+        """True for the int8 pool (scale planes present) — a *static*
+        property: None-ness is pytree structure, not data, so it is
+        knowable at trace time."""
+        return self.k_scale is not None
+
+    @property
+    def n_pages(self) -> int:
+        return self.k.shape[-4]
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[-3]
+
+    @property
+    def nbytes(self) -> int:
+        """Total bytes across all array leaves (pool accounting)."""
+        return sum(int(x.nbytes) for x in jax.tree_util.tree_leaves(self))
+
+    def with_view(self, block_tbl, pos, page_ids, page_off) -> "PagedKV":
+        """Attach the per-call view (table + positions + scatter
+        coordinates) to a pool, for one attention call."""
+        return dataclasses.replace(self, block_tbl=block_tbl, pos=pos,
+                                   page_ids=page_ids, page_off=page_off)
+
+    def pool(self) -> "PagedKV":
+        """Strip the per-call view, keeping only the pools — the form
+        carried in serve state and stacked across layers by scan."""
+        return dataclasses.replace(self, block_tbl=None, pos=None,
+                                   page_ids=None, page_off=None)
+
+    def scales(self) -> Optional[Tuple[jax.Array, jax.Array]]:
+        """Legacy ``(k_scales, v_scales)`` tuple, or None (fp pool)."""
+        if not self.quantized:
+            return None
+        return (self.k_scale, self.v_scale)
+
+
+jax.tree_util.register_dataclass(
+    PagedKV,
+    data_fields=["k", "v", "k_scale", "v_scale", "block_tbl", "pos",
+                 "page_ids", "page_off"],
+    meta_fields=[],
+)
+
+
+# --------------------------------------------------------------------
+# backend registry
+# --------------------------------------------------------------------
+
+_BACKENDS: Dict[str, Callable] = {}
+
+
+def register(name: str, fn: Callable) -> None:
+    """Register (or override) a paged-attention backend."""
+    _BACKENDS[name] = fn
+
+
+def get(name: str) -> Callable:
+    if name not in _BACKENDS:
+        raise KeyError(f"unknown attention backend {name!r}; "
+                       f"registered: {available()}")
+    return _BACKENDS[name]
+
+
+def available() -> Tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
+
+
+def resolve(impl: str, platform: Optional[str] = None) -> str:
+    """Resolve an ``attn_impl`` name to a registered backend.
+
+    ``"auto"`` mirrors ``MappedModel.select_backend``: the Pallas
+    kernel on TPU, the jnp oracle on every other platform.  Explicit
+    names pass through (so ``--attn-impl pallas`` on CPU runs the
+    kernel in interpret mode — slow, but the correctness leg CI uses).
+    """
+    if impl == "auto":
+        platform = platform if platform is not None else jax.default_backend()
+        return "pallas" if platform == "tpu" else "jnp"
+    if impl not in _BACKENDS:
+        raise ValueError(f"attn_impl must be 'auto' or one of "
+                         f"{available()}; got {impl!r}")
+    return impl
+
+
+def valid_impls() -> Tuple[str, ...]:
+    """Accepted ``attn_impl`` spellings (``"auto"`` + registered)."""
+    return ("auto",) + available()
+
+
+# --------------------------------------------------------------------
+# the two in-tree backends
+# --------------------------------------------------------------------
+
+
+def _gathered_views(q: jax.Array, kv: PagedKV):
+    """Logical [B, n_ps*page, KV, hd] K/V views through the block
+    table, dequantized to ``q.dtype`` — the jnp oracle's gather, also
+    the reference the kernel tests diff against."""
+    dt = q.dtype
+    B = q.shape[0]
+    N_pages, page = kv.n_pages, kv.page_size
+    n_ps = kv.block_tbl.shape[1]
+    gtbl = jnp.clip(kv.block_tbl, 0, N_pages - 1)
+    if kv.quantized:
+        kf = (kv.k[gtbl].astype(dt) * kv.k_scale[gtbl].astype(dt)).reshape(
+            B, n_ps * page, *kv.k.shape[2:])
+        vf = (kv.v[gtbl].astype(dt) * kv.v_scale[gtbl].astype(dt)).reshape(
+            B, n_ps * page, *kv.v.shape[2:])
+    else:
+        kf = kv.k[gtbl].reshape(B, n_ps * page, *kv.k.shape[2:])
+        vf = kv.v[gtbl].reshape(B, n_ps * page, *kv.v.shape[2:])
+    return kf.astype(dt), vf.astype(dt)
+
+
+def _attend_jnp(q: jax.Array, kv: PagedKV, *, n_heads: int, head_dim: int,
+                window) -> jax.Array:
+    """The jnp oracle: gather the full logical view, mask on absolute
+    positions, full-axis softmax.  Bitwise-reference semantics; every
+    other backend is gated against this path."""
+    B, C = q.shape[0], q.shape[1]
+    S = kv.block_tbl.shape[1] * kv.page_size
+    kf, vf = _gathered_views(q, kv)
+    kf = repeat_kv(kf, n_heads)
+    vf = repeat_kv(vf, n_heads)
+    k_pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    mask = position_mask(kv.pos, k_pos, window, causal=True)  # [B, C, S]
+    s = jnp.einsum("bqhd,bshd->bhqs", q, kf) / np.sqrt(head_dim)
+    s = s.astype(jnp.float32) + mask[:, None, :, :]
+    probs = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", probs, vf)
+
+
+def _attend_pallas(q: jax.Array, kv: PagedKV, *, n_heads: int,
+                   head_dim: int, window) -> jax.Array:
+    """The Pallas page-walking kernel (``kernels.paged_attention``).
+
+    Imported lazily so this module stays importable without pulling the
+    Pallas toolchain in (and so kernels can import the primitives above
+    without a cycle).
+    """
+    from ..kernels.paged_attention import paged_attention
+    return paged_attention(q, kv.k, kv.v, kv.block_tbl, kv.pos, window,
+                           k_scale=kv.k_scale, v_scale=kv.v_scale)
+
+
+register("jnp", _attend_jnp)
+register("pallas", _attend_pallas)

@@ -74,6 +74,7 @@ from ..arch import model as M
 from ..arch.config import ArchConfig
 from ..core.pipeline import MappedModel
 from ..dist import sharding as SH
+from ..nn import attn_backend as AB
 from .faults import PoolExhaust
 from .pages import PagePool
 from .pages import page_demand as _page_demand
@@ -108,6 +109,12 @@ class ServeConfig:
     # cap on pages the prefix cache may hold (None = pool minus one
     # full slot, so cached prefixes can never starve admission)
     prefix_hold_budget: Optional[int] = None
+    # paged-attention backend (repro.nn.attn_backend registry):
+    # 'auto' = Pallas kernel on TPU / jnp gather oracle elsewhere;
+    # explicit 'jnp' | 'pallas' force one (the kernel runs in interpret
+    # mode off-TPU — slow, correctness-leg only).  Never changes token
+    # streams: backends are hard-gated bit-identical.
+    attn_impl: str = "auto"
 
     def __post_init__(self):
         if self.page_size:
@@ -119,6 +126,10 @@ class ServeConfig:
             raise ValueError(
                 "share_prefix/kv_int8 are page-pool features: set "
                 "ServeConfig(page_size=...) to enable the paged cache")
+        if self.attn_impl not in AB.valid_impls():
+            raise ValueError(
+                f"attn_impl must be one of {AB.valid_impls()}; "
+                f"got {self.attn_impl!r}")
 
     @property
     def paged(self) -> bool:
@@ -339,7 +350,8 @@ class ServeEngine:
         if scfg.paged:
             self._paged_sample = jax.jit(
                 lambda p, kv, tbl, pos, t, n: M.paged_decode_step(
-                    p, kv, tbl, pos, t, n, cfg, sample_greedy=True))
+                    p, kv, tbl, pos, t, n, cfg, sample_greedy=True,
+                    attn_impl=scfg.attn_impl))
             # COW: seed a request's fresh tail page with a copy of a
             # shared page (all layers, every pool leaf incl. scales)
             self._copy_page = jax.jit(
@@ -1103,6 +1115,7 @@ class DeviceContinuousBatcher:
         n_ps, N = scfg.pages_per_slot, scfg.n_pages
         page = scfg.page_size
         share = scfg.share_prefix
+        attn_impl = scfg.attn_impl
 
         def one_step(params, qtok, qlen, qreq, qfeat, qhasf, qsh, qdem,
                      qstart, qcow, qreg, nq, st):
@@ -1188,7 +1201,7 @@ class DeviceContinuousBatcher:
                 chunk = jnp.where(jj < c[:, None], chunk, 0)
                 nxt, pages = M.paged_decode_step(
                     params, st["pages"], st["tbl"], pos, chunk, c, cfg,
-                    sample_greedy=True)
+                    sample_greedy=True, attn_impl=attn_impl)
                 pos = pos + c
                 rec = active & (pos >= plen)  # prompt consumed: record
                 if gate_fn is not None:

@@ -109,7 +109,14 @@ def stable_shard(request_id: Any, n_shards: int) -> int:
 
 
 class ShardedServe:
-    """Data-parallel serve shards behind one submit/run interface."""
+    """Data-parallel serve shards behind one submit/run interface.
+
+    Engine-level knobs ride in on ``scfg`` — notably
+    ``ServeConfig(attn_impl=...)`` (the paged-attention backend from
+    ``repro.nn.attn_backend``), which every shard's engine picks up
+    identically; backends are bit-identical, so routing and failover
+    replay are backend-agnostic.
+    """
 
     def __init__(self, cfg, params, scfg: ServeConfig, mesh, *,
                  gate=None, gate_backend: str = "jnp", eos_token: int = 0,

@@ -10,6 +10,8 @@
 #   serve-bench-prefill        chunked paged prefill parity smoke   (exit 43)
 #   serve-bench-shared-prefix  prefix-sharing + int8 page pool      (exit 44)
 #   serve-bench-faults         seeded crash/poison failover parity  (exit 45)
+#   paged-attn-roofline        kernel HBM bytes/token must undercut
+#                              the jnp gather path (deterministic)   (exit 46)
 #   pytest                     the tier-1 suite                     (pytest's)
 #
 # Bench JSONs land in ${BENCH_DIR:-/tmp/bench-artifacts} so CI can
@@ -70,6 +72,15 @@ echo "[test.sh] phase: serve-bench-faults"
 PYTHONPATH=src:. python -m benchmarks.serve_bench --smoke \
     --scenario faults --out "$BENCH_DIR/BENCH_serve_faults.json" \
     || fail serve-bench-faults 45
+
+# paged-attention roofline rot-check: the Pallas kernel's DMA model
+# must move fewer HBM bytes per decoded token than the measured jnp
+# gather path, on both fp32 and int8 pools (byte accounting is
+# deterministic — no timing, so this is a hard gate on every leg)
+echo "[test.sh] phase: paged-attn-roofline"
+PYTHONPATH=src:. python -m benchmarks.roofline --paged-attn \
+    --out "$BENCH_DIR/BENCH_paged_attn.json" \
+    || fail paged-attn-roofline 46
 
 echo "[test.sh] phase: pytest"
 # --durations surfaces the slowest tests in the CI log so suite-time

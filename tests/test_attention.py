@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 
 from repro.nn import attention as A
+from repro.nn import attn_backend as AB
 
 PAGE = 8
 
@@ -85,21 +86,21 @@ def test_paged_attention_int8_close_to_fp():
     page_ids = jnp.take_along_axis(tbl, positions // PAGE, axis=1)
     page_off = positions % PAGE
 
-    def run(kv_scales, kp, vp):
+    def run(kv):
         return A.paged_decode_attention_block(
-            p, x, kp, vp, tbl, positions, page_ids, page_off,
+            p, x, kv.with_view(tbl, positions, page_ids, page_off),
             n_heads=H, n_kv_heads=H, head_dim=hd, rope_theta=0.0,
-            window=jnp.int32(0), qk_norm=False, norm_eps=1e-6,
-            kv_scales=kv_scales)
+            window=jnp.int32(0), qk_norm=False, norm_eps=1e-6)
 
-    out_fp, _, _ = run(None, jnp.zeros((N, PAGE, H, hd), jnp.float32),
-                       jnp.zeros((N, PAGE, H, hd), jnp.float32))
-    out_i8, kp8, _, (sk, sv) = run(
-        (jnp.zeros((N, PAGE, H, 1), jnp.float32),
-         jnp.zeros((N, PAGE, H, 1), jnp.float32)),
-        jnp.zeros((N, PAGE, H, hd), jnp.int8),
-        jnp.zeros((N, PAGE, H, hd), jnp.int8))
-    assert kp8.dtype == jnp.int8
+    out_fp, _ = run(AB.PagedKV(
+        k=jnp.zeros((N, PAGE, H, hd), jnp.float32),
+        v=jnp.zeros((N, PAGE, H, hd), jnp.float32)))
+    out_i8, kv8 = run(AB.PagedKV(
+        k=jnp.zeros((N, PAGE, H, hd), jnp.int8),
+        v=jnp.zeros((N, PAGE, H, hd), jnp.int8),
+        k_scale=jnp.zeros((N, PAGE, H, 1), jnp.float32),
+        v_scale=jnp.zeros((N, PAGE, H, 1), jnp.float32)))
+    assert kv8.k.dtype == jnp.int8 and kv8.quantized
     scale = float(jnp.max(jnp.abs(out_fp)))
     assert float(jnp.max(jnp.abs(out_fp - out_i8))) < 0.05 * scale
 
@@ -162,35 +163,120 @@ def test_paged_attention_masks_at_page_boundaries(window):
                       .copy())  # non-contiguous logical->physical map
     x_all = jnp.asarray(rng.normal(0, 1, (B, 2 * PAGE, D)), jnp.float32)
 
-    def step(k_pages, v_pages, x, pos, width):
+    def step(kv, x, pos, width):
         positions = pos[:, None] + jnp.arange(width)[None]
         lp = positions // PAGE
         page_ids = jnp.take_along_axis(tbl, jnp.clip(lp, 0, n_ps - 1),
                                        axis=1)
         return A.paged_decode_attention_block(
-            p, x, k_pages, v_pages, tbl, positions, page_ids,
-            positions % PAGE, n_heads=H, n_kv_heads=H, head_dim=hd,
+            p, x, kv.with_view(tbl, positions, page_ids,
+                               positions % PAGE),
+            n_heads=H, n_kv_heads=H, head_dim=hd,
             rope_theta=0.0, window=jnp.int32(window), qk_norm=False,
             norm_eps=1e-6)
 
     # token-by-token over 2 pages
-    kp1, vp1 = k_pages, v_pages
+    kv1 = AB.PagedKV(k=k_pages, v=v_pages)
     outs = []
     for i in range(2 * PAGE):
-        o, kp1, vp1 = step(kp1, vp1, x_all[:, i: i + 1],
-                           jnp.full((B,), i, jnp.int32), 1)
+        o, kv1 = step(kv1, x_all[:, i: i + 1],
+                      jnp.full((B,), i, jnp.int32), 1)
         outs.append(np.asarray(o))
     # chunks of 6 (straddles the boundary at PAGE=8: chunk [6..11])
-    kp2, vp2 = k_pages, v_pages
+    kv2 = AB.PagedKV(k=k_pages, v=v_pages)
     outs2 = []
     for i in range(0, 2 * PAGE, 6):
         w = min(6, 2 * PAGE - i)
-        o, kp2, vp2 = step(kp2, vp2, x_all[:, i: i + w],
-                           jnp.full((B,), i, jnp.int32), w)
+        o, kv2 = step(kv2, x_all[:, i: i + w],
+                      jnp.full((B,), i, jnp.int32), w)
         outs2.append(np.asarray(o))
     got1 = np.concatenate(outs, axis=1)
     got2 = np.concatenate(outs2, axis=1)
     np.testing.assert_allclose(got1, got2, atol=2e-5)
     # written cells land in the mapped physical pages, bitwise
     np.testing.assert_array_equal(
-        np.asarray(kp1), np.asarray(kp2))
+        np.asarray(kv1.k), np.asarray(kv2.k))
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_paged_decode_attention_legacy_call_shape_shim(quantized):
+    """The pre-PagedKV positional call shape still works for one
+    release: it warns, rewraps into PagedKV, and returns bitwise the
+    same values (legacy tuple style) as the new API."""
+    rng = np.random.default_rng(23)
+    B, H, hd, n_ps = 2, 2, 8, 2
+    D = H * hd
+    N = B * n_ps
+    p = A.init_attention(jax.random.PRNGKey(5), D, H, H, hd)
+    tbl = jnp.asarray(np.arange(N).reshape(B, n_ps))
+    x = jnp.asarray(rng.normal(0, 1, (B, 3, D)), jnp.float32)
+    positions = jnp.broadcast_to(jnp.arange(3)[None], (B, 3))
+    page_ids = jnp.take_along_axis(tbl, positions // PAGE, axis=1)
+    page_off = positions % PAGE
+    if quantized:
+        kp = jnp.zeros((N, PAGE, H, hd), jnp.int8)
+        scales = (jnp.zeros((N, PAGE, H, 1), jnp.float32),
+                  jnp.zeros((N, PAGE, H, 1), jnp.float32))
+        kv0 = AB.PagedKV(k=kp, v=kp, k_scale=scales[0], v_scale=scales[1])
+    else:
+        kp = jnp.zeros((N, PAGE, H, hd), jnp.float32)
+        scales = None
+        kv0 = AB.PagedKV(k=kp, v=kp)
+    kwargs = dict(n_heads=H, n_kv_heads=H, head_dim=hd, rope_theta=0.0,
+                  window=jnp.int32(0), qk_norm=False, norm_eps=1e-6)
+    with pytest.warns(DeprecationWarning, match="PagedKV"):
+        legacy = A.paged_decode_attention_block(
+            p, x, kp, kp, tbl, positions, page_ids, page_off,
+            kv_scales=scales, **kwargs)
+    out_new, kv_new = A.paged_decode_attention_block(
+        p, x, kv0.with_view(tbl, positions, page_ids, page_off), **kwargs)
+    np.testing.assert_array_equal(np.asarray(legacy[0]),
+                                  np.asarray(out_new))
+    np.testing.assert_array_equal(np.asarray(legacy[1]),
+                                  np.asarray(kv_new.k))
+    np.testing.assert_array_equal(np.asarray(legacy[2]),
+                                  np.asarray(kv_new.v))
+    if quantized:
+        assert len(legacy) == 4
+        np.testing.assert_array_equal(np.asarray(legacy[3][0]),
+                                      np.asarray(kv_new.k_scale))
+    else:
+        assert len(legacy) == 3
+    # mixing the new PagedKV arg with legacy positionals is an error
+    with pytest.raises(TypeError):
+        A.paged_decode_attention_block(p, x, kv0, tbl, **kwargs)
+
+
+@pytest.mark.parametrize("window", [0, PAGE])
+def test_dense_and_paged_share_mask_at_page_boundaries(window):
+    """Regression for the shared ``position_mask`` helper: the dense
+    ring-cache decode and the paged pool decode must stay bitwise
+    identical at every position up to the cache size — including the
+    exact page boundaries PAGE-1 / PAGE / 2*PAGE-1, where an
+    off-by-one in either path's mask (e.g. attending a stale zeroed
+    cell whose absolute position is negative) changes the softmax."""
+    rng = np.random.default_rng(31)
+    B, H, hd, n_ps = 2, 2, 8, 2
+    D = H * hd
+    S_max = n_ps * PAGE  # dense cache length == paged gathered length
+    N = B * n_ps
+    p = A.init_attention(jax.random.PRNGKey(9), D, H, H, hd)
+    tbl = jnp.asarray(np.arange(N).reshape(B, n_ps))
+    x_all = jnp.asarray(rng.normal(0, 1, (B, S_max, D)), jnp.float32)
+    ck = jnp.zeros((B, S_max, H, hd), jnp.float32)
+    cv = jnp.zeros((B, S_max, H, hd), jnp.float32)
+    kv = AB.PagedKV(k=jnp.zeros((N, PAGE, H, hd), jnp.float32),
+                    v=jnp.zeros((N, PAGE, H, hd), jnp.float32))
+    kwargs = dict(n_heads=H, n_kv_heads=H, head_dim=hd, rope_theta=1e4,
+                  window=jnp.int32(window), qk_norm=False, norm_eps=1e-6)
+    dense = jax.jit(lambda *a: A.decode_attention_block(*a, **kwargs))
+    paged = jax.jit(lambda *a: A.paged_decode_attention_block(*a, **kwargs))
+    for pos in range(S_max):
+        x = x_all[:, pos: pos + 1]
+        out_d, ck, cv, _ = dense(p, x, ck, cv, jnp.int32(pos))
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        page_ids = jnp.take_along_axis(tbl, positions // PAGE, axis=1)
+        out_p, kv = paged(
+            p, x, kv.with_view(tbl, positions, page_ids, positions % PAGE))
+        np.testing.assert_array_equal(np.asarray(out_d), np.asarray(out_p),
+                                      err_msg=f"pos={pos}")

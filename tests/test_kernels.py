@@ -149,3 +149,172 @@ def test_mapped_model_backend_selection():
     fn = r.mapped.jax_predict("auto")
     np.testing.assert_array_equal(
         np.asarray(fn(ds.X_test[:16])), r.mapped.predict(ds.X_test[:16]))
+
+
+# ----------------------------------------------------- paged attention
+def _paged_case(seed, B, C, H, KV, hd, page, n_ps, dtype, quantized):
+    """Random q + fully-populated pools + a shuffled block table.
+
+    Pools are filled with garbage everywhere; only the mask (absolute
+    positions, causal + window) decides which cells each query sees,
+    so stale-cell leakage shows up as a mismatch immediately.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.nn import attn_backend as AB
+
+    rng = np.random.default_rng(seed)
+    N = B * n_ps
+    q = jnp.asarray(rng.normal(0, 1, (B, C, H, hd)), dtype)
+    tbl = jnp.asarray(rng.permutation(N).reshape(B, n_ps).astype(np.int32))
+    pos0 = rng.integers(0, n_ps * page - C + 1, B)
+    pos = jnp.asarray(pos0[:, None] + np.arange(C)[None], jnp.int32)
+    if quantized:
+        kv = AB.PagedKV(
+            k=jnp.asarray(rng.integers(-127, 128, (N, page, KV, hd)),
+                          jnp.int8),
+            v=jnp.asarray(rng.integers(-127, 128, (N, page, KV, hd)),
+                          jnp.int8),
+            k_scale=jnp.asarray(rng.uniform(0.005, 0.02, (N, page, KV, 1)),
+                                jnp.float32),
+            v_scale=jnp.asarray(rng.uniform(0.005, 0.02, (N, page, KV, 1)),
+                                jnp.float32))
+    else:
+        kv = AB.PagedKV(
+            k=jnp.asarray(rng.normal(0, 1, (N, page, KV, hd)), dtype),
+            v=jnp.asarray(rng.normal(0, 1, (N, page, KV, hd)), dtype))
+    page_ids = jnp.take_along_axis(tbl, jnp.clip(pos // page, 0, n_ps - 1),
+                                   axis=1)
+    return q, kv.with_view(tbl, pos, page_ids, pos % page)
+
+
+def _run_both(q, kv, H, hd, window):
+    """jit both backends (the serve path is always jitted; eager-vs-jit
+    differs by ulps through XLA fusion, jit-vs-jit is bitwise)."""
+    import functools
+    import jax
+    from repro.nn import attn_backend as AB
+
+    outs = {}
+    for name in ("jnp", "pallas"):
+        fn = jax.jit(functools.partial(AB.get(name), n_heads=H,
+                                       head_dim=hd, window=window))
+        outs[name] = np.asarray(fn(q, kv))
+    return outs
+
+
+@pytest.mark.parametrize("page,n_ps", [(4, 3), (8, 2)])
+@pytest.mark.parametrize("C", [1, 5])
+@pytest.mark.parametrize("H,KV", [(4, 4), (4, 2), (8, 1)])
+def test_paged_attention_kernel_bitwise_fp(page, n_ps, C, H, KV):
+    """Tentpole gate: the Pallas kernel (interpret mode on CPU) is
+    BITWISE identical to the jnp oracle for fp pools — decode (C=1)
+    and prefill-chunk variants, across page sizes and GQA ratios."""
+    import jax.numpy as jnp
+    q, kv = _paged_case(page * 100 + C * 10 + H, 3, C, H, KV, 8,
+                        page, n_ps, jnp.float32, quantized=False)
+    outs = _run_both(q, kv, H, 8, jnp.int32(page))
+    np.testing.assert_array_equal(outs["jnp"], outs["pallas"])
+
+
+@pytest.mark.parametrize("window", [0, 4, 13])
+def test_paged_attention_kernel_bitwise_bf16_windows(window):
+    import jax.numpy as jnp
+    q, kv = _paged_case(window + 1, 2, 3, 4, 2, 16, 8, 2,
+                        jnp.bfloat16, quantized=False)
+    outs = _run_both(q, kv, 4, 16, jnp.int32(window))
+    np.testing.assert_array_equal(outs["jnp"], outs["pallas"])
+
+
+@pytest.mark.parametrize("C", [1, 6])
+def test_paged_attention_kernel_int8(C):
+    """int8 pools: kernel dequant (per-page scale planes, fused at the
+    VMEM staging step) is bitwise against the jnp int8 oracle, and the
+    int8 result tracks an fp run of the dequantized pool exactly (the
+    oracle dequantizes identically, so closeness to true fp is already
+    pinned by the serve-level int8 tolerance tests)."""
+    import jax.numpy as jnp
+    from repro.nn import attn_backend as AB
+    q, kv = _paged_case(C, 2, C, 4, 2, 8, 4, 3, jnp.float32,
+                        quantized=True)
+    outs = _run_both(q, kv, 4, 8, jnp.int32(0))
+    np.testing.assert_array_equal(outs["jnp"], outs["pallas"])
+    # dequantizing the pool up front and running fp must agree closely
+    fp_kv = AB.PagedKV(
+        k=kv.k.astype(jnp.float32) * kv.k_scale,
+        v=kv.v.astype(jnp.float32) * kv.v_scale,
+        block_tbl=kv.block_tbl, pos=kv.pos,
+        page_ids=kv.page_ids, page_off=kv.page_off)
+    fp = _run_both(q, fp_kv, 4, 8, jnp.int32(0))
+    np.testing.assert_allclose(outs["pallas"], fp["pallas"], atol=1e-6)
+
+
+def test_paged_attention_hbm_bytes_accounting():
+    """The kernel's DMA-byte model: int8 pools move ~4x fewer KV bytes
+    than fp32, and bytes scale linearly with the per-request page
+    count (n_ps), independent of the pool size."""
+    from repro.kernels.paged_attention import paged_attention_hbm_bytes
+    kw = dict(B=8, C=1, H=4, KV=4, hd=64, page=16)
+    fp = paged_attention_hbm_bytes(n_ps=8, pool_bytes=4, quantized=False,
+                                   act_bytes=2, **kw)
+    i8 = paged_attention_hbm_bytes(n_ps=8, pool_bytes=1, quantized=True,
+                                   act_bytes=2, **kw)
+    assert i8 < fp / 2.5
+    fp2 = paged_attention_hbm_bytes(n_ps=16, pool_bytes=4, quantized=False,
+                                    act_bytes=2, **kw)
+    assert fp2 > 1.9 * fp
+
+
+def test_attn_backend_registry():
+    """Registry semantics mirror ``MappedModel.select_backend``: auto
+    resolves by platform, explicit names pass through, unknown names
+    fail loudly at config time."""
+    from repro.nn import attn_backend as AB
+    assert set(AB.available()) >= {"jnp", "pallas"}
+    assert AB.resolve("auto", "tpu") == "pallas"
+    assert AB.resolve("auto", "cpu") == "jnp"
+    assert AB.resolve("jnp", "tpu") == "jnp"
+    assert AB.resolve("pallas", "cpu") == "pallas"
+    assert AB.resolve("auto") in AB.available()
+    assert AB.valid_impls()[0] == "auto"
+    with pytest.raises(ValueError):
+        AB.resolve("triton")
+    with pytest.raises(KeyError):
+        AB.get("triton")
+
+
+def test_paged_block_pallas_matches_jnp_end_to_end():
+    """Full ``paged_decode_attention_block`` (projection + scatter +
+    attend + output proj) under jit: impl="pallas" is bitwise
+    identical to impl="jnp" — the acceptance gate for threading the
+    backend through the serve path."""
+    import functools
+    import jax
+    import jax.numpy as jnp
+    from repro.nn import attention as A
+    from repro.nn import attn_backend as AB
+
+    rng = np.random.default_rng(3)
+    B, H, hd, page, n_ps = 2, 4, 16, 4, 2
+    D = H * hd
+    N = B * n_ps
+    p = A.init_attention(jax.random.PRNGKey(1), D, H, 2, hd, qk_norm=True)
+    tbl = jnp.asarray(np.arange(N).reshape(B, n_ps))
+    x = jnp.asarray(rng.normal(0, 1, (B, 3, D)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(3)[None], (B, 3)).astype(jnp.int32)
+    page_ids = jnp.take_along_axis(tbl, pos // page, axis=1)
+    kv = AB.PagedKV(k=jnp.zeros((N, page, 2, hd), jnp.float32),
+                    v=jnp.zeros((N, page, 2, hd), jnp.float32))
+
+    def run(impl):
+        fn = jax.jit(functools.partial(
+            A.paged_decode_attention_block, n_heads=H, n_kv_heads=2,
+            head_dim=hd, rope_theta=1e4, qk_norm=True, norm_eps=1e-6,
+            impl=impl))
+        return fn(p, x, kv.with_view(tbl, pos, page_ids, pos % page),
+                  window=jnp.int32(0))
+
+    out_j, kv_j = run("jnp")
+    out_p, kv_p = run("pallas")
+    np.testing.assert_array_equal(np.asarray(out_j), np.asarray(out_p))
+    np.testing.assert_array_equal(np.asarray(kv_j.k), np.asarray(kv_p.k))

@@ -514,7 +514,8 @@ def test_int8_paged_logits_within_tolerance(engine):
     cfg = eng.cfg
     kv_fp = M.init_paged_kv(cfg, 8, 8)
     kv_i8 = M.init_paged_kv(cfg, 8, 8, kv_dtype="int8")
-    assert kv_i8[0].dtype == jnp.int8 and len(kv_i8) == 4
+    assert kv_i8.k.dtype == jnp.int8 and kv_i8.quantized
+    assert not kv_fp.quantized and kv_fp.block_tbl is None
     tbl = jnp.asarray(np.arange(8).reshape(2, 4))
     rng = np.random.default_rng(0)
     toks = jnp.asarray(rng.integers(1, 97, (2, 20)), jnp.int32)
@@ -531,6 +532,41 @@ def test_int8_paged_logits_within_tolerance(engine):
     assert diff < 0.05 * scale, (diff, scale)
 
 
+def test_paged_decode_step_pallas_matches_jnp(engine):
+    """``attn_impl="pallas"`` threads through the full scanned decode
+    step (per-layer windows, pool donation) and its logits are bitwise
+    identical to ``attn_impl="jnp"`` — the serve-path acceptance gate
+    for backend selection (interpret mode on CPU)."""
+    import jax.numpy as jnp
+
+    eng, _ = engine
+    cfg = eng.cfg
+    tbl = jnp.asarray(np.arange(8).reshape(2, 4))
+    rng = np.random.default_rng(5)
+    toks = jnp.asarray(rng.integers(1, 97, (2, 10)), jnp.int32)
+    kv_j = M.init_paged_kv(cfg, 8, 8)
+    kv_p = M.init_paged_kv(cfg, 8, 8)
+    for t in range(10):
+        pos = jnp.full((2,), t, jnp.int32)
+        n = jnp.ones((2,), jnp.int32)
+        lj, kv_j = M.paged_decode_step(eng.params, kv_j, tbl, pos,
+                                       toks[:, t: t + 1], n, cfg,
+                                       attn_impl="jnp")
+        lp, kv_p = M.paged_decode_step(eng.params, kv_p, tbl, pos,
+                                       toks[:, t: t + 1], n, cfg,
+                                       attn_impl="pallas")
+        np.testing.assert_array_equal(np.asarray(lj), np.asarray(lp),
+                                      err_msg=f"step {t}")
+    np.testing.assert_array_equal(np.asarray(kv_j.k), np.asarray(kv_p.k))
+
+
+def test_serve_config_validates_attn_impl():
+    """Unknown backend names fail at config time, not mid-serve."""
+    ServeConfig(max_batch=2, cache_len=16, attn_impl="pallas")
+    with pytest.raises(ValueError, match="attn_impl"):
+        ServeConfig(max_batch=2, cache_len=16, attn_impl="triton")
+
+
 def test_int8_pool_undercuts_fp_bytes(engine):
     """The memory claim behind --kv-int8: at the same page count the
     int8 pool (values + scale planes) costs strictly less than the bf16
@@ -538,9 +574,7 @@ def test_int8_pool_undercuts_fp_bytes(engine):
     eng, _ = engine
     fp = M.init_paged_kv(eng.cfg, 8, 8)
     i8 = M.init_paged_kv(eng.cfg, 8, 8, kv_dtype="int8")
-    fp_bytes = sum(x.nbytes for x in fp)
-    i8_bytes = sum(x.nbytes for x in i8)
-    assert i8_bytes < fp_bytes
+    assert i8.nbytes < fp.nbytes
 
 
 def test_submit_empty_prompt_rejected(engine):
