@@ -1,17 +1,20 @@
-"""Bench regression gate: compare a fresh serve-bench run to the
-checked-in baseline.
+"""Bench regression gate: compare a fresh serve-bench (or, with
+``--train``, train-faults) run to the checked-in baseline.
 
 Parity is a *hard* gate — a sharded, device-resident, or chunked-prefill
-batcher whose token streams diverge from the host reference fails CI.
-Timing is warn-only: CI runners are noisy, so a tokens/s drop prints a
-``::warning`` annotation (visible in the GitHub checks UI) without
-failing the job.  The fresh run is also validated against a small
-schema, so a bench refactor that silently stops emitting a section
-(e.g. the prefill scenario) is a hard failure, not a silently-passing
-gate.
+batcher whose token streams diverge from the host reference fails CI,
+and so does an elastic-training run whose post-recovery loss segments
+diverge bitwise from fresh restores.  Timing is warn-only: CI runners
+are noisy, so a tokens/s (or step-time) drop prints a ``::warning``
+annotation (visible in the GitHub checks UI) without failing the job.
+The fresh run is also validated against a small schema, so a bench
+refactor that silently stops emitting a section (e.g. the prefill
+scenario) is a hard failure, not a silently-passing gate.
 
     python -m benchmarks.check_regression NEW.json BENCH_serve.json
     python -m benchmarks.check_regression NEW.json BASE.json --timing-tol 0.5
+    python -m benchmarks.check_regression --train NEW_train.json \\
+        BENCH_train.json
 
 Exit codes: 0 = ok (possibly with timing warnings), 1 = correctness
 regression (parity break, zero completions, schema violation, or
@@ -106,11 +109,43 @@ _SCHEMA = [
 ]
 
 
-def validate_schema(new: dict) -> list:
+# the shape BENCH_train.json (benchmarks/train_faults.py) must have
+_TRAIN_SCHEMA = [
+    (("arch",), str, True),
+    (("steps",), int, True),
+    (("batch",), int, True),
+    (("seq",), int, True),
+    (("seed",), int, True),
+    (("plan",), list, True),
+    (("workers_start",), int, True),
+    (("workers_end",), int, True),
+    (("model_parallel",), int, True),
+    (("chips_per_host",), int, True),
+    (("counters",), dict, True),
+    (("counters", "straggler_evicted"), int, True),
+    (("counters", "host_lost"), int, True),
+    (("counters", "remesh"), int, True),
+    (("counters", "ckpt_corrupted"), int, True),
+    (("counters", "ckpt_fallback"), int, True),
+    (("counters", "preempt_restart"), int, True),
+    (("segments",), list, True),
+    (("segment_parity",), list, True),
+    (("resume_parity",), bool, True),
+    (("completed_steps",), int, True),
+    (("configured_steps",), int, True),
+    (("executed_steps",), int, True),
+    (("recovered_steps",), int, True),
+    (("loss_first",), _NUM, True),
+    (("loss_last",), _NUM, True),
+    (("loss_improved",), bool, True),
+]
+
+
+def validate_schema(new: dict, schema=None) -> list:
     """Check the fresh bench json against the expected shape; returns a
     list of violations (empty = valid)."""
     failures = []
-    for path, typ, required in _SCHEMA:
+    for path, typ, required in (_SCHEMA if schema is None else schema):
         node, missing = new, False
         for key in path:
             if not isinstance(node, dict) or key not in node:
@@ -331,23 +366,110 @@ def check(new: dict, base: dict, timing_tol: float = 0.5) -> int:
     return 0
 
 
+def check_train(new: dict, base: dict, timing_tol: float = 0.5) -> int:
+    """Gate a fresh BENCH_train.json (benchmarks/train_faults.py).
+
+    Everything structural is HARD: the seeded plan, the batch schedule
+    and the step boundaries are deterministic, so a fault that never
+    fires, a fleet that never shrinks, a run that stops short, or a
+    post-recovery segment that diverges bitwise from a fresh restore is
+    a real regression — never runner noise.  Only step time (and the
+    short-horizon loss trend) warn.
+    """
+    failures = []
+    warnings = []
+
+    failures += [f"schema: {v}"
+                 for v in validate_schema(new, schema=_TRAIN_SCHEMA)]
+
+    if not new.get("resume_parity"):
+        bad = [s for s in new.get("segment_parity", [])
+               if not s.get("parity")]
+        failures.append(
+            "post-recovery loss segments diverged bitwise from fresh "
+            f"restores (resume_parity=false): {bad or 'no segments'}")
+    if new.get("completed_steps", 0) < new.get("configured_steps", 1):
+        failures.append(
+            f"elastic run stopped short: {new.get('completed_steps')}/"
+            f"{new.get('configured_steps')} steps")
+    # recovered-steps floor: the machinery must carry real work past
+    # the first injected fault, not just limp to the finish line
+    floor = max(1, new.get("configured_steps", 0) // 2)
+    if new.get("recovered_steps", 0) < floor:
+        failures.append(
+            f"only {new.get('recovered_steps', 0)} steps executed past "
+            f"the first injected fault (floor: {floor})")
+    for key, msg in (
+            ("straggler_evicted", "no persistent straggler was evicted"),
+            ("host_lost", "the injected host loss never fired"),
+            ("remesh", "the fleet never remeshed"),
+            ("ckpt_corrupted", "the checkpoint corruption never fired"),
+            ("ckpt_fallback", "recovery never fell back past the "
+                              "corrupted latest checkpoint"),
+            ("preempt_restart", "the injected SIGTERM never warm-"
+                                "restarted the run")):
+        if new.get("counters", {}).get(key, 0) <= 0:
+            failures.append(f"{msg} ({key}=0)")
+    if new.get("workers_end", 0) >= new.get("workers_start", 0):
+        failures.append(
+            f"fleet did not shrink (workers {new.get('workers_start')} "
+            f"-> {new.get('workers_end')}): evictions were ineffective")
+
+    if not new.get("loss_improved"):
+        warnings.append(
+            f"loss did not improve over the faulted run "
+            f"({new.get('loss_first')} -> {new.get('loss_last')}; "
+            f"warn-only: short-horizon smoke runs are noisy)")
+    base_p50 = base.get("step_ms_p50")
+    new_p50 = new.get("step_ms_p50")
+    same_scale = new.get("steps") == base.get("steps")
+    if base_p50 and new_p50 and same_scale \
+            and new_p50 > (1.0 + timing_tol) * base_p50:
+        warnings.append(
+            f"p50 step time {new_p50:.1f}ms is "
+            f"{100 * (new_p50 / base_p50 - 1):.0f}% above the baseline "
+            f"{base_p50:.1f}ms (warn-only: CI timing is noisy)")
+
+    for w in warnings:
+        print(f"::warning title=train-bench timing::{w}")
+    for f in failures:
+        print(f"::error title=train-bench regression::{f}")
+    if failures:
+        return 1
+    cc = new.get("counters", {})
+    print(f"train bench gate ok: parity={new.get('resume_parity')}, "
+          f"{new.get('completed_steps')}/{new.get('configured_steps')} "
+          f"steps ({new.get('recovered_steps')} recovered), workers "
+          f"{new.get('workers_start')}->{new.get('workers_end')}, "
+          f"remesh={cc.get('remesh')}, fallback={cc.get('ckpt_fallback')}"
+          f", {len(warnings)} timing warning(s)")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("new", help="fresh serve-bench output json")
-    ap.add_argument("baseline", help="checked-in BENCH_serve.json")
+    ap.add_argument("new", help="fresh bench output json")
+    ap.add_argument("baseline", help="checked-in baseline json")
+    ap.add_argument("--train", action="store_true",
+                    help="gate a train-faults record (BENCH_train.json) "
+                         "instead of the serve bench")
     ap.add_argument("--timing-tol", type=float, default=0.5,
-                    help="warn when tokens/s drops more than this "
-                         "fraction below baseline (default 0.5)")
+                    help="warn when throughput drops (or step time "
+                         "rises) more than this fraction vs baseline "
+                         "(default 0.5)")
     args = ap.parse_args(argv)
+    title = "train-bench" if args.train else "serve-bench"
     try:
         with open(args.new) as f:
             new = json.load(f)
         with open(args.baseline) as f:
             base = json.load(f)
     except (OSError, json.JSONDecodeError) as e:
-        print(f"::error title=serve-bench regression::cannot read bench "
+        print(f"::error title={title} regression::cannot read bench "
               f"json: {e}")
         return 1
+    if args.train:
+        return check_train(new, base, timing_tol=args.timing_tol)
     return check(new, base, timing_tol=args.timing_tol)
 
 

@@ -101,6 +101,33 @@ def serve_table(path="BENCH_serve.json") -> List[str]:
     return rows
 
 
+def train_faults_table(path="BENCH_train.json") -> List[str]:
+    r = json.load(open(path))
+    c = r["counters"]
+    rows = [
+        "| steps | workers | remesh | evict | host lost | ckpt fallback "
+        "| preempt | resume parity |",
+        "|---|---|---|---|---|---|---|---|",
+        f"| {r['completed_steps']}/{r['configured_steps']} "
+        f"(+{r['executed_steps'] - r['completed_steps']} replayed) "
+        f"| {r['workers_start']}→{r['workers_end']} | {c['remesh']} "
+        f"| {c['straggler_evicted']} | {c['host_lost']} "
+        f"| {c['ckpt_fallback']} | {c['preempt_restart']} "
+        f"| {r['resume_parity']} |",
+        "",
+        "| segment | cause | steps | mesh | parity |",
+        "|---|---|---|---|---|"]
+    parity = {(s["ckpt_step"], s["cause"]): s["parity"]
+              for s in r.get("segment_parity", [])}
+    for i, s in enumerate(r["segments"]):
+        p = parity.get((s["ckpt_step"], s["cause"]))
+        rows.append(
+            f"| {i} | {s['cause']} | {s['start']}.."
+            f"{s['start'] + s['n_steps']} | {s['mesh'][0]}×{s['mesh'][1]} "
+            f"| {'—' if p is None else p} |")
+    return rows
+
+
 def hillclimb_table(paths=("hillclimb_results.json", "hillclimb_extra.json",
                            "hillclimb_extra2.json", "hillclimb_extra3.json",
                            "hillclimb_extra4.json")) -> List[str]:
@@ -136,5 +163,10 @@ if __name__ == "__main__":
     try:
         print()
         print("\n".join(serve_table()))
+    except FileNotFoundError:
+        pass
+    try:
+        print()
+        print("\n".join(train_faults_table()))
     except FileNotFoundError:
         pass

@@ -17,12 +17,13 @@ def main() -> None:
 
     from . import (accuracy_parity, action_bits, coexist, convert_time,
                    dist_overhead, scalability, serve_bench, throughput,
-                   upgrades)
+                   train_faults, upgrades)
 
     print("name,us_per_call,derived")
     failures = []
     for mod in (accuracy_parity, convert_time, action_bits, scalability,
-                upgrades, throughput, coexist, serve_bench, dist_overhead):
+                upgrades, throughput, coexist, serve_bench, dist_overhead,
+                train_faults):
         try:
             mod.main(quick=quick)
         except Exception as e:  # keep the suite going; report at the end

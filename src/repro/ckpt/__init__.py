@@ -1,3 +1,5 @@
-from .manager import CheckpointManager, config_hash
+from .manager import (CheckpointCorrupt, CheckpointManager,
+                      CheckpointWriteError, config_hash)
 
-__all__ = ["CheckpointManager", "config_hash"]
+__all__ = ["CheckpointManager", "CheckpointCorrupt", "CheckpointWriteError",
+           "config_hash"]

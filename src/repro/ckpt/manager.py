@@ -1,9 +1,11 @@
-"""Fault-tolerant checkpointing: atomic, retained, elastically reshardable.
+"""Fault-tolerant checkpointing: atomic, retained, verified, elastic.
 
 Layout per step::
 
     <dir>/step_000123.tmp/   (written)  ->  <dir>/step_000123/  (renamed)
-        manifest.json   {step, tree paths, shapes, dtypes, config_hash}
+        manifest.json   {step, tree paths, shapes, dtypes, config_hash,
+                         files: {arrays.npz: {crc32, bytes}}}
+        manifest.crc32  CRC32 of manifest.json's own bytes
         arrays.npz      flat leaf arrays keyed by joined path
 
 Restore targets *any* mesh: leaves are stored unsharded (logical arrays)
@@ -12,8 +14,19 @@ pod-loss recovery reduce to a restore onto the new mesh.  On a multi-host
 fleet the same manifest scheme works with per-shard files + a global
 index; single-process IO keeps the logic identical here.
 
+Every payload file's CRC32 is recorded in the manifest and re-checked on
+restore (the manifest itself is covered by a sidecar CRC), so a torn
+write, bit rot, or a dropped archive member raises
+:class:`CheckpointCorrupt` instead of silently restoring garbage;
+:meth:`CheckpointManager.latest_valid_step` walks retained steps
+newest-first so an elastic restart falls back past a damaged checkpoint
+instead of dying on it.  Stale ``step_*.tmp`` directories left by a
+crash mid-write are removed on construction.
+
 Async mode snapshots to host memory and writes on a background thread so
-the training loop never blocks on storage.
+the training loop never blocks on storage; a failed background write
+surfaces as :class:`CheckpointWriteError` (naming the failing step) on
+the *next* ``save``/``wait`` call and never poisons subsequent saves.
 """
 from __future__ import annotations
 
@@ -23,6 +36,7 @@ import os
 import shutil
 import threading
 import time
+import zlib
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -30,6 +44,16 @@ import jax
 import numpy as np
 
 SEP = "/"
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint on disk failed verification (CRC mismatch, damaged
+    manifest, or missing leaf) — restore refuses to hand back garbage."""
+
+
+class CheckpointWriteError(RuntimeError):
+    """A background (async) checkpoint write failed; raised on the next
+    ``save``/``wait`` call with the failing step in the message."""
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -45,30 +69,61 @@ def _tree_def(tree):
     return jax.tree_util.tree_structure(tree)
 
 
+def _crc32_file(path: str) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            crc = zlib.crc32(chunk, crc)
+    return crc
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3,
                  async_writes: bool = False):
         self.directory = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
+        # a crash mid-_write leaves step_*.tmp behind; nothing ever
+        # publishes them, so reclaim the space now instead of letting
+        # them accumulate across restarts
+        for d in os.listdir(directory):
+            if d.startswith("step_") and d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(directory, d),
+                              ignore_errors=True)
         self._pool = ThreadPoolExecutor(max_workers=1) if async_writes else None
         self._pending: Optional[Future] = None
+        self._pending_step: Optional[int] = None
 
     # ------------------------------------------------------------- save
     def save(self, step: int, tree: Any, config_hash: str = "") -> str:
         flat = _flatten(tree)  # host copy (snapshot)
         if self._pool is not None:
-            if self._pending is not None:
-                self._pending.result()  # backpressure: one in flight
+            self._reap()  # backpressure: one in flight; surfaces failures
             self._pending = self._pool.submit(
                 self._write, step, flat, config_hash)
+            self._pending_step = step
             return self._final_dir(step)
         return self._write(step, flat, config_hash)
 
     def wait(self):
-        if self._pending is not None:
-            self._pending.result()
-            self._pending = None
+        self._reap()
+
+    def _reap(self):
+        """Join the in-flight async write, surfacing its failure (with
+        the failing step) without poisoning the manager: the pending
+        slot is cleared *before* re-raising, so the next save starts
+        clean."""
+        if self._pending is None:
+            return
+        fut, step = self._pending, self._pending_step
+        self._pending = None
+        self._pending_step = None
+        try:
+            fut.result()
+        except Exception as e:
+            raise CheckpointWriteError(
+                f"async checkpoint write for step {step} failed: "
+                f"{e!r}") from e
 
     def _final_dir(self, step: int) -> str:
         return os.path.join(self.directory, f"step_{step:09d}")
@@ -80,16 +135,24 @@ class CheckpointManager:
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        arrays = os.path.join(tmp, "arrays.npz")
+        np.savez(arrays, **flat)
         manifest = {
             "step": step,
             "config_hash": config_hash,
             "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                        for k, v in flat.items()},
+            "files": {"arrays.npz": {"crc32": _crc32_file(arrays),
+                                     "bytes": os.path.getsize(arrays)}},
             "time": time.time(),
         }
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
+        blob = json.dumps(manifest).encode()
+        with open(os.path.join(tmp, "manifest.json"), "wb") as f:
+            f.write(blob)
+        # the manifest holds the payload CRCs, so it needs its own
+        # integrity record — a sidecar CRC over its exact bytes
+        with open(os.path.join(tmp, "manifest.crc32"), "w") as f:
+            f.write(str(zlib.crc32(blob)))
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)  # atomic publish
@@ -100,6 +163,84 @@ class CheckpointManager:
         steps = self.list_steps()
         for s in steps[: -self.keep] if self.keep else []:
             shutil.rmtree(self._final_dir(s), ignore_errors=True)
+
+    # ----------------------------------------------------- verification
+    def verify(self, step: int) -> List[str]:
+        """Integrity-check one retained step; returns the list of
+        problems (empty = valid).  Checks, in order: the manifest
+        parses and matches its sidecar CRC, the recorded step matches,
+        every recorded payload file exists with the recorded size and
+        CRC32, and every manifest leaf is present in the archive.
+        Legacy checkpoints without CRC records fall back to the
+        structural checks only."""
+        d = self._final_dir(step)
+        mpath = os.path.join(d, "manifest.json")
+        problems: List[str] = []
+        try:
+            blob = open(mpath, "rb").read()
+        except OSError as e:
+            return [f"manifest unreadable: {e}"]
+        crc_path = os.path.join(mpath[: -len(".json")] + ".crc32")
+        if os.path.exists(crc_path):
+            try:
+                want = int(open(crc_path).read().strip())
+            except (OSError, ValueError) as e:
+                return [f"manifest sidecar unreadable: {e}"]
+            if zlib.crc32(blob) != want:
+                return [f"manifest.json CRC mismatch (step {step})"]
+        try:
+            manifest = json.loads(blob)
+        except ValueError as e:
+            return [f"manifest.json does not parse: {e}"]
+        if manifest.get("step") != step:
+            problems.append(
+                f"manifest step {manifest.get('step')} != dir step {step}")
+        for fname, rec in manifest.get("files", {}).items():
+            fpath = os.path.join(d, fname)
+            if not os.path.exists(fpath):
+                problems.append(f"{fname} missing")
+                continue
+            size = os.path.getsize(fpath)
+            if size != rec.get("bytes"):
+                problems.append(
+                    f"{fname} is {size} bytes, manifest says "
+                    f"{rec.get('bytes')} (truncated write?)")
+                continue
+            if _crc32_file(fpath) != rec.get("crc32"):
+                problems.append(f"{fname} CRC32 mismatch")
+        if not problems:
+            # CRCs cover bytes; membership covers a well-formed archive
+            # that lost a member (or a legacy checkpoint with no CRCs)
+            try:
+                with np.load(os.path.join(d, "arrays.npz")) as data:
+                    names = set(data.files)
+            except Exception as e:
+                return [f"arrays.npz unreadable: {e}"]
+            for key in manifest.get("leaves", {}):
+                if key not in names:
+                    problems.append(f"leaf {key} missing from arrays.npz")
+        return problems
+
+    def latest_valid_step(self) -> Optional[int]:
+        """Newest retained step that passes :meth:`verify` — the elastic
+        restart entry point: a corrupted latest checkpoint is skipped,
+        not fatal."""
+        for s in reversed(self.list_steps()):
+            if not self.verify(s):
+                return s
+        return None
+
+    def _load_verified(self, step: int) -> Tuple[dict, Any]:
+        problems = self.verify(step)
+        if problems:
+            raise CheckpointCorrupt(
+                f"checkpoint step {step} failed verification: "
+                + "; ".join(problems))
+        d = self._final_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        return manifest, data
 
     # ---------------------------------------------------------- restore
     def list_steps(self) -> List[int]:
@@ -123,12 +264,7 @@ class CheckpointManager:
         preemption writes) cannot build up front; the flat view is the
         manifest's own keying, shapes included.
         """
-        d = self._final_dir(step)
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
-        if manifest["step"] != step:
-            raise ValueError("manifest/step mismatch")
-        data = np.load(os.path.join(d, "arrays.npz"))
+        manifest, data = self._load_verified(step)
         return {k: data[k] for k in manifest["leaves"]}
 
     def restore(self, step: int, target_tree: Any,
@@ -138,12 +274,7 @@ class CheckpointManager:
         ``shardings`` may come from a *different* mesh than the one the
         checkpoint was written under — this is the elastic-restart path.
         """
-        d = self._final_dir(step)
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
-        if manifest["step"] != step:
-            raise ValueError("manifest/step mismatch")
-        data = np.load(os.path.join(d, "arrays.npz"))
+        _, data = self._load_verified(step)
         flat_target, treedef = jax.tree_util.tree_flatten_with_path(
             target_tree)
         shard_flat = (jax.tree_util.tree_leaves(shardings)
@@ -153,7 +284,8 @@ class CheckpointManager:
             key = SEP.join(
                 str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
             if key not in data:
-                raise KeyError(f"checkpoint missing leaf {key}")
+                raise CheckpointCorrupt(
+                    f"checkpoint step {step} missing leaf {key}")
             arr = data[key]
             if tuple(arr.shape) != tuple(leaf.shape):
                 raise ValueError(

@@ -10,8 +10,12 @@ Four orthogonal pieces, each consumed by train/launch/serve:
 * :mod:`~repro.dist.stragglers` — straggler detection, elastic mesh
   replanning and SIGTERM preemption handling;
 * :mod:`~repro.dist.pipeline` — GPipe-style pipeline parallelism over the
-  stacked transformer layers.
+  stacked transformer layers;
+* :mod:`~repro.dist.elastic` — deterministic seeded training fault
+  injection (worker slowdown, host loss, SIGTERM, checkpoint
+  corruption), consumed by :class:`repro.train.elastic.ElasticTrainer`
+  at step boundaries only (the module stays import-clean of jax).
 """
-from . import compress, pipeline, sharding, stragglers
+from . import compress, elastic, pipeline, sharding, stragglers
 
-__all__ = ["compress", "pipeline", "sharding", "stragglers"]
+__all__ = ["compress", "elastic", "pipeline", "sharding", "stragglers"]

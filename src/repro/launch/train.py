@@ -42,6 +42,26 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--resume", default=None, help="'auto' or step number")
+    ap.add_argument("--elastic", action="store_true",
+                    help="run under the ElasticTrainer supervision loop: "
+                         "straggler eviction -> remesh -> verified "
+                         "checkpoint restore, SIGTERM warm restart")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="TrainFaultPlan spec for --elastic (e.g. "
+                         "'slow:1:1.0@1,lost:2@8' or 'seed:0:4'); see "
+                         "repro.dist.elastic.TrainFaultPlan.parse")
+    ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
+                    help="checkpoint directory for the elastic "
+                         "supervision loop (defaults to --ckpt-dir; one "
+                         "of the two is required with --elastic)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="simulated host count for --elastic (default: "
+                         "devices // chips-per-host)")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="pinned model-parallel degree for --elastic")
+    ap.add_argument("--chips-per-host", type=int, default=None,
+                    help="devices per simulated host (default: "
+                         "--model-parallel)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write per-step spans as Chrome trace-event "
                          "JSON (chrome://tracing / Perfetto)")
@@ -67,6 +87,9 @@ def main(argv=None):
     pipe = TokenPipeline(TokenPipelineConfig(
         vocab_size=cfg.vocab_size, seq_len=args.seq,
         global_batch=args.batch, seed=args.seed))
+
+    if args.elastic:
+        return _run_elastic(args, cfg, tcfg, pipe)
 
     key = jax.random.PRNGKey(args.seed)
     params = M.init_params(cfg, key)
@@ -168,6 +191,60 @@ def main(argv=None):
         if h.count:
             print(f"step time p50={h.percentile(50):.1f}ms "
                   f"p99={h.percentile(99):.1f}ms over {h.count} steps")
+    if len(losses) >= 10:
+        first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+        print(f"loss {first:.4f} -> {last:.4f} "
+              f"({'improved' if last < first else 'NOT improved'})")
+    return losses
+
+
+def _run_elastic(args, cfg, tcfg, pipe):
+    """--elastic: hand the loop to the ElasticTrainer supervision loop."""
+    from ..dist.elastic import TrainFaultPlan, describe
+    from ..train.elastic import ElasticTrainer
+
+    snap = args.snapshot_dir or args.ckpt_dir
+    if not snap:
+        raise SystemExit(
+            "--elastic needs --snapshot-dir (or --ckpt-dir): recovery "
+            "restores from verified checkpoints")
+    plan = (TrainFaultPlan.parse(args.fault_plan)
+            if args.fault_plan else None)
+    if plan is not None:
+        for line in describe(plan):
+            print(f"fault plan: {line}")
+
+    tracer = metrics = None
+    if args.trace or args.metrics_out:
+        from ..obs import Metrics, Tracer
+        metrics = Metrics()
+        tracer = Tracer(metrics=metrics)
+
+    # keep enough retained steps that a fallback past a corrupted latest
+    # checkpoint always has somewhere to land
+    mgr = CheckpointManager(snap, keep=max(8, 2 * args.ckpt_every))
+    trainer = ElasticTrainer(
+        cfg, tcfg, pipe, mgr, steps=args.steps,
+        n_workers=args.workers, model_parallel=args.model_parallel,
+        chips_per_host=args.chips_per_host, plan=plan,
+        ckpt_every=args.ckpt_every, seed=args.seed,
+        metrics=metrics, tracer=tracer, metrics_out=args.metrics_out)
+    result = trainer.run()
+
+    for i, seg in enumerate(result.segments):
+        print(f"segment {i} ({seg.cause}): steps {seg.start}.."
+              f"{seg.start + seg.n_steps} on mesh "
+              f"{seg.mesh_shape[0]}x{seg.mesh_shape[1]}")
+    print(f"elastic run: {result.steps_completed}/"
+          f"{result.configured_steps} steps, {result.executed_steps} "
+          f"executed, workers {result.workers_start} -> "
+          f"{len(result.workers_final)}"
+          + (" (externally preempted)" if result.preempted_externally
+             else ""))
+    if tracer is not None and args.trace:
+        tracer.write_chrome_trace(args.trace)
+        print(f"chrome trace -> {args.trace}")
+    losses = result.losses
     if len(losses) >= 10:
         first, last = np.mean(losses[:5]), np.mean(losses[-5:])
         print(f"loss {first:.4f} -> {last:.4f} "

@@ -1,4 +1,6 @@
 from . import optimizer
+from .elastic import ElasticResult, ElasticTrainer
 from .step import TrainConfig, init_train_state, make_train_step
 
-__all__ = ["TrainConfig", "init_train_state", "make_train_step", "optimizer"]
+__all__ = ["TrainConfig", "init_train_state", "make_train_step", "optimizer",
+           "ElasticTrainer", "ElasticResult"]

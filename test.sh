@@ -12,6 +12,8 @@
 #   serve-bench-faults         seeded crash/poison failover parity  (exit 45)
 #   paged-attn-roofline        kernel HBM bytes/token must undercut
 #                              the jnp gather path (deterministic)   (exit 46)
+#   train-faults               elastic training fault drill: evict/
+#                              remesh/fallback with bitwise resume    (exit 47)
 #   pytest                     the tier-1 suite                     (pytest's)
 #
 # Bench JSONs land in ${BENCH_DIR:-/tmp/bench-artifacts} so CI can
@@ -81,6 +83,18 @@ echo "[test.sh] phase: paged-attn-roofline"
 PYTHONPATH=src:. python -m benchmarks.roofline --paged-attn \
     --out "$BENCH_DIR/BENCH_paged_attn.json" \
     || fail paged-attn-roofline 46
+
+# elastic-training fault drill: the seeded plan must evict a straggler,
+# survive a host loss with the latest checkpoint corrupted (fallback +
+# replay), and warm-restart through an injected SIGTERM — with every
+# post-recovery loss segment bitwise equal to a fresh restore.  The
+# drill simulates a fixed 4-host x 2-chip fleet, so it pins its own
+# 8-device flag and gates identically on every CI device leg.
+echo "[test.sh] phase: train-faults"
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src:. python -m benchmarks.train_faults --smoke \
+    --out "$BENCH_DIR/BENCH_train.json" \
+    || fail train-faults 47
 
 echo "[test.sh] phase: pytest"
 # --durations surfaces the slowest tests in the CI log so suite-time

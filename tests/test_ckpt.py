@@ -1,13 +1,17 @@
 """Checkpointing: atomic roundtrip, retention, async, corrupted-dir safety."""
 import json
 import os
+import zipfile
+import zlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.ckpt.manager import CheckpointManager, config_hash
+from repro.ckpt.manager import (CheckpointCorrupt, CheckpointManager,
+                                CheckpointWriteError, config_hash)
+from repro.dist.elastic import corrupt_checkpoint
 
 
 def _tree(seed=0):
@@ -60,6 +64,115 @@ def test_shape_mismatch_rejected(tmp_path):
     bad["params"]["w"] = jnp.zeros((4, 4), jnp.float32)
     with pytest.raises(ValueError):
         mgr.restore(1, bad)
+
+
+def test_stale_tmp_removed_on_init(tmp_path):
+    """A crash mid-write leaves step_*.tmp behind; a fresh manager must
+    reclaim it (nothing ever publishes a .tmp dir)."""
+    stale = tmp_path / "step_000000009.tmp"
+    stale.mkdir()
+    (stale / "arrays.npz").write_bytes(b"half a write")
+    CheckpointManager(str(tmp_path), keep=3)
+    assert not stale.exists()
+
+
+def test_crc_recorded_in_manifest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, _tree())
+    d = tmp_path / "step_000000001"
+    manifest = json.loads((d / "manifest.json").read_bytes())
+    rec = manifest["files"]["arrays.npz"]
+    payload = (d / "arrays.npz").read_bytes()
+    assert rec["crc32"] == zlib.crc32(payload)
+    assert rec["bytes"] == len(payload)
+    # the sidecar covers the manifest's own bytes
+    assert int((d / "manifest.crc32").read_text()) == \
+        zlib.crc32((d / "manifest.json").read_bytes())
+    assert mgr.verify(1) == []
+
+
+def test_async_write_failure_surfaces_without_poisoning(tmp_path,
+                                                        monkeypatch):
+    """A failed background write raises CheckpointWriteError (naming the
+    failing step) on the NEXT save — and the save after that succeeds."""
+    import repro.ckpt.manager as mod
+    real_savez = mod.np.savez
+    calls = {"n": 0}
+
+    def flaky_savez(*a, **k):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise OSError("disk detached")
+        return real_savez(*a, **k)
+
+    monkeypatch.setattr(mod.np, "savez", flaky_savez)
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_writes=True)
+    mgr.save(1, _tree(1))  # background write fails
+    with pytest.raises(CheckpointWriteError, match="step 1"):
+        mgr.save(2, _tree(2))
+    mgr.save(2, _tree(2))  # manager not poisoned: clean retry works
+    mgr.wait()
+    assert mgr.latest_step() == 2
+    assert mgr.verify(2) == []
+
+
+@pytest.mark.parametrize("what,expect", [
+    ("arrays", "truncated|CRC32"),
+    ("manifest", "manifest"),
+    ("leaf", "CRC32|bytes"),
+])
+def test_corruption_detected_on_restore(tmp_path, what, expect):
+    """Torn arrays write, manifest bit rot, and a dropped archive member
+    must all raise CheckpointCorrupt instead of restoring garbage."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    tree = _tree()
+    mgr.save(1, tree)
+    corrupt_checkpoint(str(tmp_path), 1, what)
+    assert mgr.verify(1) != []
+    with pytest.raises(CheckpointCorrupt, match=expect):
+        mgr.restore(1, jax.tree.map(jnp.zeros_like, tree))
+    assert mgr.latest_valid_step() is None
+
+
+def test_missing_leaf_detected_by_membership(tmp_path):
+    """A well-formed archive that lost a member — with byte-accurate
+    size/CRC records — is still caught by the manifest-leaf membership
+    check (the legacy/no-CRC detection path)."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    tree = _tree()
+    mgr.save(1, tree)
+    d = tmp_path / "step_000000001"
+    arrays = d / "arrays.npz"
+    with zipfile.ZipFile(arrays) as zf:
+        names = zf.namelist()
+        keep = {n: zf.read(n) for n in names[1:]}
+    with zipfile.ZipFile(arrays, "w", zipfile.ZIP_STORED) as zf:
+        for n, blob in keep.items():
+            zf.writestr(n, blob)
+    # refresh the manifest's file record so only membership can catch it
+    manifest = json.loads((d / "manifest.json").read_bytes())
+    manifest["files"]["arrays.npz"] = {
+        "crc32": zlib.crc32(arrays.read_bytes()),
+        "bytes": arrays.stat().st_size}
+    blob = json.dumps(manifest).encode()
+    (d / "manifest.json").write_bytes(blob)
+    (d / "manifest.crc32").write_text(str(zlib.crc32(blob)))
+    with pytest.raises(CheckpointCorrupt, match="missing from arrays.npz"):
+        mgr.restore(1, jax.tree.map(jnp.zeros_like, tree))
+
+
+def test_latest_valid_step_falls_back_past_corruption(tmp_path):
+    """Elastic restart entry point: a corrupted latest checkpoint is
+    skipped, not fatal — recovery lands on the previous retained step."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    for s in (1, 2, 3):
+        mgr.save(s, _tree(s))
+    corrupt_checkpoint(str(tmp_path), 3, "manifest")
+    assert mgr.latest_step() == 3            # still listed...
+    assert mgr.latest_valid_step() == 2      # ...but not trusted
+    r = mgr.restore(2, jax.tree.map(jnp.zeros_like, _tree()))
+    np.testing.assert_array_equal(np.asarray(r["params"]["w"]),
+                                  np.asarray(_tree(2)["params"]["w"]))
 
 
 def test_restore_with_sharding(tmp_path):

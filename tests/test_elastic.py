@@ -1,0 +1,226 @@
+"""Elastic training: fault plans, injectors, and the supervision loop.
+
+The plan/injector layer is pure host-side bookkeeping and tests
+in-process.  The ElasticTrainer end-to-end paths need a multi-device
+fleet, so they run as subprocesses with the fake-device XLA flag (the
+in-process interpreter here typically has 1 CPU device).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.dist.elastic import (CORRUPT_KINDS, CorruptCkpt, HostLoss,
+                                Preempt, SlowWorker, TrainFaultInjector,
+                                TrainFaultPlan, describe, plan_to_json)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, devices: int = 8, timeout: int = 900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={devices}")
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + ":" + REPO
+    return subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True,
+        text=True, timeout=timeout, cwd=REPO)
+
+
+# ---------------------------------------------------------------- plans
+
+def test_parse_grammar():
+    plan = TrainFaultPlan.parse(
+        "slow:1:2.5@3, lost:2@8, preempt@10, corrupt:manifest@9")
+    assert plan.faults == (
+        SlowWorker(worker=1, delay_s=2.5, at_step=3),
+        HostLoss(worker=2, at_step=8),
+        Preempt(at_step=10),
+        CorruptCkpt(at_step=9, what="manifest"))
+    # optional n_steps on slow; default corruption kind
+    plan = TrainFaultPlan.parse("slow:0:1.0:7@2,corrupt@5")
+    assert plan.faults[0].n_steps == 7
+    assert plan.faults[1].what == "arrays"
+
+
+def test_parse_rejects_garbage():
+    with pytest.raises(ValueError, match="needs @<step>"):
+        TrainFaultPlan.parse("lost:1")
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        TrainFaultPlan.parse("explode@3")
+    with pytest.raises(ValueError, match="must be one of"):
+        TrainFaultPlan.parse("corrupt:sneeze@3")
+    with pytest.raises(TypeError):
+        TrainFaultPlan(["not a fault"])
+
+
+def test_seeded_plan_is_deterministic_and_staged():
+    a = TrainFaultPlan.seeded(7, n_workers=4, ckpt_every=4)
+    b = TrainFaultPlan.seeded(7, n_workers=4, ckpt_every=4)
+    assert a.faults == b.faults
+    slow = next(f for f in a if isinstance(f, SlowWorker))
+    lost = next(f for f in a if isinstance(f, HostLoss))
+    corrupt = next(f for f in a if isinstance(f, CorruptCkpt))
+    preempt = next(f for f in a if isinstance(f, Preempt))
+    # slowdown and host loss hit different non-zero workers
+    assert slow.worker != lost.worker
+    assert slow.worker != 0 and lost.worker != 0
+    # staged against the checkpoint cadence: corrupt the then-latest
+    # ckpt, then force a restore, then preempt in the final stretch
+    assert slow.at_step < corrupt.at_step < lost.at_step < preempt.at_step
+    assert corrupt.what in CORRUPT_KINDS
+    # the parse shorthand expands to the same plan
+    assert TrainFaultPlan.parse("seed:7:4:4").faults == a.faults
+
+
+def test_seeded_plan_needs_three_workers():
+    with pytest.raises(ValueError, match=">= 3 workers"):
+        TrainFaultPlan.seeded(0, n_workers=2)
+
+
+def test_plan_descriptions_round_trip():
+    plan = TrainFaultPlan.seeded(3, n_workers=4)
+    assert len(describe(plan)) == len(plan)
+    encoded = json.loads(plan_to_json(plan))
+    assert [e["kind"] for e in encoded] == [
+        type(f).__name__ for f in plan]
+
+
+# ------------------------------------------------------------- injector
+
+def test_injector_one_shot_and_windowed():
+    inj = TrainFaultInjector(TrainFaultPlan.parse(
+        "slow:1:2.0:3@2, lost:2@5, preempt@7, corrupt@4"))
+    # slow: windowed over [2, 5), worker 1 only
+    assert inj.slow_delay(1, 1) == 0.0
+    assert inj.slow_delay(0, 2) == 0.0
+    assert inj.slow_delay(1, 2) == 2.0
+    assert inj.slow_delay(1, 4) == 2.0
+    assert inj.slow_delay(1, 5) == 0.0  # window over, retired
+    # one-shot: each event fires exactly once even if polled again
+    assert inj.ckpt_corruptions(4) and not inj.ckpt_corruptions(4)
+    assert inj.host_losses(5) == [2] and inj.host_losses(5) == []
+    assert inj.preempt_due(7) and not inj.preempt_due(7)
+    assert inj.pending() == []
+    assert len(inj.fired) == 4
+
+
+def test_injector_late_boundary_still_fires():
+    """A boundary past at_step (e.g. after replaying lost steps) still
+    collects the event — faults can't be skipped over."""
+    inj = TrainFaultInjector(TrainFaultPlan.parse("lost:1@3,preempt@3"))
+    assert inj.host_losses(6) == [1]
+    assert inj.preempt_due(6)
+
+
+def test_fault_module_is_jax_import_clean():
+    """Contract (enforced by ruff TID251, re-checked here): loading
+    dist/elastic.py must not pull in jax.  Loaded by file path in a
+    fresh interpreter — importing repro.dist.elastic as a package would
+    drag jax in via the package __init__."""
+    code = textwrap.dedent("""
+        import importlib.util, sys
+        spec = importlib.util.spec_from_file_location(
+            "elastic_standalone", "src/repro/dist/elastic.py")
+        mod = importlib.util.module_from_spec(spec)
+        sys.modules[spec.name] = mod  # dataclasses resolves annotations
+        spec.loader.exec_module(mod)
+        assert "jax" not in sys.modules, "dist/elastic.py imported jax"
+        plan = mod.TrainFaultPlan.seeded(0, n_workers=4)
+        assert len(plan) == 4
+        print("CLEAN")
+    """)
+    r = _run(code, devices=1, timeout=120)
+    assert r.returncode == 0, r.stderr
+    assert "CLEAN" in r.stdout
+
+
+# ------------------------------------------- supervision loop (subproc)
+
+def test_elastic_trainer_evicts_restores_and_replays():
+    """Full drill at reduced scale: straggler eviction (graceful),
+    host loss with a corrupted latest checkpoint (fallback + replay),
+    and bitwise replay parity for every recovered segment."""
+    code = textwrap.dedent("""
+        import tempfile
+        from repro.ckpt.manager import CheckpointManager
+        from repro.configs import get_smoke_config
+        from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+        from repro.dist.elastic import TrainFaultPlan
+        from repro.train import optimizer as OPT
+        from repro.train.elastic import ElasticTrainer
+        from repro.train.step import TrainConfig
+
+        cfg = get_smoke_config("qwen2_1_5b")
+        tcfg = TrainConfig(microbatches=2, q_block=32,
+                           adamw=OPT.AdamWConfig(lr=2e-3, warmup_steps=3,
+                                                 total_steps=12))
+        pipe = TokenPipeline(TokenPipelineConfig(
+            vocab_size=cfg.vocab_size, seq_len=32, global_batch=8, seed=0))
+        plan = TrainFaultPlan.parse(
+            "slow:1:9.0:5@1, corrupt:manifest@6, lost:2@7")
+        mgr = CheckpointManager(tempfile.mkdtemp(), keep=0)
+        trainer = ElasticTrainer(
+            cfg, tcfg, pipe, mgr, steps=12, n_workers=4,
+            model_parallel=2, chips_per_host=2, plan=plan,
+            min_strikes=3, ckpt_every=3, seed=0)
+        result = trainer.run()
+        assert result.completed, result
+        assert result.steps_completed == 12
+        assert result.workers_start == 4
+        assert len(result.workers_final) == 2
+        causes = [s.cause for s in result.segments]
+        assert causes == ["init", "straggler", "host-loss"], causes
+        # host-loss recovery had to fall back past the corrupted latest
+        for seg in result.segments:
+            if seg.ckpt_step is None:
+                continue
+            ref = trainer.replay(seg.ckpt_step, seg.device_ids,
+                                 seg.mesh_shape, seg.n_steps)
+            assert ref == seg.losses, (seg.cause, ref, seg.losses)
+        print("ELASTIC-OK")
+    """)
+    r = _run(code, devices=8)
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "ELASTIC-OK" in r.stdout
+
+
+def test_launch_train_elastic_cli(tmp_path):
+    """Acceptance: launch/train.py --elastic completes its configured
+    steps under a fault plan that evicts a worker mid-run, and the
+    elastic events are visible in --metrics-out."""
+    snap = tmp_path / "snap"
+    mout = tmp_path / "metrics.jsonl"
+    code = textwrap.dedent(f"""
+        from repro.launch.train import main
+        losses = main([
+            "--smoke", "--elastic", "--steps", "10", "--seq", "32",
+            "--batch", "8", "--workers", "4", "--model-parallel", "2",
+            "--chips-per-host", "2", "--ckpt-every", "3",
+            "--fault-plan", "slow:1:9.0:5@1",
+            "--snapshot-dir", {str(snap)!r},
+            "--metrics-out", {str(mout)!r},
+        ])
+        assert len(losses) == 10, len(losses)
+        print("CLI-OK")
+    """)
+    r = _run(code, devices=8)
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "CLI-OK" in r.stdout
+    lines = [json.loads(ln) for ln in
+             mout.read_text().splitlines() if ln.strip()]
+    assert len(lines) >= 10
+    last = lines[-1]
+    counters = last.get("counters", {})
+    assert counters.get("train.straggler_evicted", 0) >= 1, last
+    assert counters.get("train.remesh", 0) >= 1, last
+    assert "train.step_ms" in last.get("histograms", {}), last
+
+
+def test_elastic_rejects_missing_snapshot_dir():
+    from repro.launch.train import main
+    with pytest.raises(SystemExit, match="snapshot-dir"):
+        main(["--smoke", "--elastic", "--steps", "2"])
