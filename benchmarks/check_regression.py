@@ -1,12 +1,18 @@
 """Bench regression gate: compare a fresh serve-bench (or, with
 ``--train``, train-faults) run to the checked-in baseline.
 
-Parity is a *hard* gate — a sharded, device-resident, or chunked-prefill
-batcher whose token streams diverge from the host reference fails CI,
-and so does an elastic-training run whose post-recovery loss segments
-diverge bitwise from fresh restores.  Timing is warn-only: CI runners
-are noisy, so a tokens/s (or step-time) drop prints a ``::warning``
-annotation (visible in the GitHub checks UI) without failing the job.
+Parity is a *hard* gate — a sharded, device-resident, chunked-prefill
+or speculative batcher whose token streams diverge from the host
+reference fails CI, and so does an elastic-training run whose
+post-recovery loss segments diverge bitwise from fresh restores.  The
+tensor-parallel leg is the one softened parity: TP psum reassociation
+may flip near-tie argmaxes, so it is gated on token-flip *rate*
+(bounded by ``serve_bench --parity-tol``) instead of bitwise equality.
+Timing is warn-only: CI runners are noisy, so a tokens/s (or
+step-time) drop prints a ``::warning`` annotation (visible in the
+GitHub checks UI) without failing the job — except the speculative-
+decode speedup, whose >= 1.3x floor is that scenario's acceptance
+criterion and fails hard.
 The fresh run is also validated against a small schema, so a bench
 refactor that silently stops emitting a section (e.g. the prefill
 scenario) is a hard failure, not a silently-passing gate.
@@ -89,9 +95,32 @@ _SCHEMA = [
     (("faults", "deadline_dropped"), int, True),
     (("faults", "failed_over_completed"), int, True),
     (("faults", "completed"), int, True),
+    # speculative-decoding contract: greedy verification must keep the
+    # streams bit-identical to the non-speculative baseline, the draft
+    # must actually propose+land tokens, and the recorded speedup must
+    # clear the acceptance floor (deterministic workload, best-of-
+    # repeats timing — see _bench_spec_decode)
+    (("spec",), dict, True),
+    (("spec", "spec_k"), int, True),
+    (("spec", "parity"), bool, True),
+    (("spec", "drafted"), int, True),
+    (("spec", "accepted"), int, True),
+    (("spec", "acceptance_rate"), _NUM, True),
+    (("spec", "speedup"), _NUM, True),
+    (("spec", "tokens_per_s"), _NUM, True),
+    (("spec", "baseline_tokens_per_s"), _NUM, True),
+    (("spec", "baseline"), dict, True),
+    (("spec", "spec"), dict, True),
     (("sharded",), dict, False),
     (("sharded", "parity"), bool, False),
     (("sharded", "paged_vs_dense_parity"), bool, False),
+    # tensor-parallel leg (mesh runs): gated on token-flip RATE, not
+    # bitwise equality — TP psum reassociation may flip near-tie
+    # argmaxes, bounded by serve_bench --parity-tol
+    (("sharded", "tp"), dict, False),
+    (("sharded", "tp", "flip_rate"), _NUM, False),
+    (("sharded", "tp", "parity_tol"), _NUM, False),
+    (("sharded", "tp", "parity_ok"), bool, False),
     # paged-attention roofline contract: serve_bench must report the
     # HBM bytes-per-token accounting for both pool dtypes (jnp gather
     # path measured via cost_analysis, kernel via its DMA model) and
@@ -188,6 +217,15 @@ def check(new: dict, base: dict, timing_tol: float = 0.5) -> int:
             failures.append(
                 f"paged-cache decode diverged from the dense cache on "
                 f"mesh {sharded.get('mesh')}")
+        tp = sharded.get("tp")
+        if tp is not None and not tp.get("parity_ok"):
+            failures.append(
+                f"tensor-parallel serve flipped "
+                f"{tp.get('flip_rate', 1):.4f} of tokens vs the "
+                f"replicated router (tolerance "
+                f"{tp.get('parity_tol', 0):.4f}; the flip RATE is the "
+                f"gate — rerun serve_bench with --parity-tol if the "
+                f"mesh legitimately reassociates the reduction)")
     for path_name in ("old", "new"):
         if new.get(path_name, {}).get("completed", 0) <= 0:
             failures.append(f"{path_name} path completed zero requests")
@@ -312,6 +350,36 @@ def check(new: dict, base: dict, timing_tol: float = 0.5) -> int:
                 failures.append(f"faults scenario: {msg} ({count}="
                                 f"{fl.get(count, 0)})")
 
+    sd = new.get("spec", {})
+    if isinstance(sd, dict) and sd:
+        # speculative decoding: parity and acceptance are deterministic
+        # (greedy verification over a deterministic workload), so both
+        # are HARD; the 1.3x speedup floor is the scenario's acceptance
+        # criterion and is gated on best-of-repeats timing
+        if not sd.get("parity"):
+            failures.append(
+                "speculative decode changed the greedy token streams "
+                "(spec.parity=false — verification must make drafts "
+                "invisible at temperature=0)")
+        if sd.get("drafted", 0) <= 0:
+            failures.append(
+                "spec scenario: the draft never proposed a token "
+                f"(drafted={sd.get('drafted', 0)})")
+        if sd.get("acceptance_rate", 0) < 0.15:
+            failures.append(
+                f"spec scenario: draft acceptance "
+                f"{sd.get('acceptance_rate', 0):.2f} below the 0.15 "
+                f"floor — the bigram table stopped imitating the LM")
+        if sd.get("speedup", 0) < 1.3:
+            failures.append(
+                f"speculative decode only "
+                f"{sd.get('speedup', 0):.2f}x over non-speculative "
+                f"greedy decode (acceptance floor: 1.3x)")
+        for path_name in ("baseline", "spec"):
+            if sd.get(path_name, {}).get("completed", 0) <= 0:
+                failures.append(
+                    f"spec {path_name} path completed zero requests")
+
     pa = new.get("paged_attention", {})
     if isinstance(pa, dict) and pa:
         # byte accounting is deterministic (cost_analysis + DMA model),
@@ -360,6 +428,9 @@ def check(new: dict, base: dict, timing_tol: float = 0.5) -> int:
           + f"@{mt.get('trace_overhead', 0):.3f}x"
           + f", faults={fl.get('recovered_fraction')}rec/"
           + f"{fl.get('failed_over_completed')}moved"
+          + f", spec={sd.get('parity')}"
+          + f"@{sd.get('acceptance_rate', 0):.2f}acc/"
+          + f"{sd.get('speedup', 0):.2f}x"
           + f", paged-attn={pa.get('fp32', {}).get('reduction', 0):.1f}x/"
           + f"i8={pa.get('int8', {}).get('reduction', 0):.1f}x"
           + f", {len(warnings)} timing warning(s)")

@@ -11,7 +11,6 @@ Param dtype is f32 master; compute casts to bf16 at the embedding.
 from __future__ import annotations
 
 import functools
-import warnings
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -476,7 +475,7 @@ def init_paged_kv(cfg: ArchConfig, n_pages: int, page_size: int,
 def paged_decode_step(params, kv, block_tbl, pos, tokens, n_new,
                       cfg: ArchConfig, *, moe_impl: str = "dense",
                       unroll: bool = False, sample_greedy: bool = False,
-                      attn_impl: str = "jnp",
+                      attn_impl: str = "jnp", all_positions: bool = False,
                       ) -> Tuple[jax.Array, PagedKV]:
     """Chunked multi-token decode/prefill through the paged KV cache.
 
@@ -499,29 +498,25 @@ def paged_decode_step(params, kv, block_tbl, pos, tokens, n_new,
     attention, mirroring the dense ``decode_step`` int8 cache).  The
     pool scans as pytree xs: ``lax.scan`` slices each leaf per layer,
     the body attaches the per-call view, and the updated per-layer
-    pools restack on the way out.  Legacy tuple pools
-    ``(k, v[, sk, sv])`` are accepted for one release (rewrapped with a
-    DeprecationWarning, returned in the same tuple shape).
+    pools restack on the way out.
 
     ``attn_impl`` picks the attention backend
     (``attn_backend.resolve``: ``'jnp'`` | ``'pallas'`` | ``'auto'``);
     it is resolved once here, outside the scan, and never changes the
     token stream (backends are gated bit-identical).
+
+    ``all_positions=True`` skips the last-valid-position narrowing and
+    projects every chunk position through the head: logits (or greedy
+    tokens) come back ``[B, C(, Vp)]`` — position ``j`` predicts the
+    token after ``tokens[:, j]``.  This is the speculative-decoding
+    verify primitive: ``rms_norm`` + the head einsum are per-position,
+    so row ``n_new[b]-1`` is bit-identical to the narrowed output.
     """
     if not isinstance(kv, PagedKV):
-        warnings.warn(
-            "passing a (k_pages, v_pages[, k_scales, v_scales]) tuple to "
-            "paged_decode_step is deprecated; pass the PagedKV from "
-            "init_paged_kv", DeprecationWarning, stacklevel=2)
-        legacy = tuple(kv)
-        kv = PagedKV(*legacy) if len(legacy) == 4 else PagedKV(*legacy[:2])
-        out, new_kv = paged_decode_step(
-            params, kv, block_tbl, pos, tokens, n_new, cfg,
-            moe_impl=moe_impl, unroll=unroll, sample_greedy=sample_greedy,
-            attn_impl=attn_impl)
-        if len(legacy) == 4:
-            return out, (new_kv.k, new_kv.v, new_kv.k_scale, new_kv.v_scale)
-        return out, (new_kv.k, new_kv.v)
+        raise TypeError(
+            "paged_decode_step expects the PagedKV from init_paged_kv; "
+            "the legacy (k, v[, sk, sv]) tuple pool was removed after "
+            f"its one-release deprecation window (got {type(kv)})")
     kv = kv.pool()  # stray view fields would confuse the layer scan
     impl = AB.resolve(attn_impl)
     B, C = tokens.shape
@@ -551,6 +546,11 @@ def paged_decode_step(params, kv, block_tbl, pos, tokens, n_new,
 
     x, new_kv = jax.lax.scan(
         body, x, (params["layers"], kv, windows), unroll=unroll)
+    if all_positions:
+        logits = lm_head(params, x, cfg.norm_eps)  # [B, C, Vp]
+        if sample_greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_kv
+        return logits, new_kv
     # select each slot's last valid position BEFORE the vocab
     # projection: the head is the dominant decode matmul and only one
     # chunk position per slot is kept (rms_norm + einsum are

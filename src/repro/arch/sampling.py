@@ -1,0 +1,155 @@
+"""On-device token sampling: temperature / top-k / top-p with
+counter-based per-request noise.
+
+The serve path needs sampling that is
+
+* **deterministic per request** — a request replayed after a shard
+  failover, resumed across waves, or re-run with a different
+  ``sync_every`` must emit the same stream;
+* **host/device bitwise-identical** — the host reference batcher and
+  the fused device batcher are parity-gated, so both must draw the
+  *same* noise for the same (request, token index);
+* **jit-friendly** — no threaded PRNG key state inside the fused
+  ``lax.while_loop`` (splitting keys per step would make the stream
+  depend on the step schedule, i.e. on ``sync_every``).
+
+So noise is *counter-based*: a stateless integer hash of
+``(seed, token_index, salt, vocab_id)`` (two rounds of the murmur3
+finalizer — splitmix-style avalanche in uint32, no x64 requirement)
+feeds a Gumbel-max categorical over the filtered logits.  The token at
+generated-index ``g`` of request with seed ``s`` depends only on
+``(s, g)`` and the logits — never on batching, chunking or wave
+boundaries.
+
+``temperature`` / ``top_k`` / ``top_p`` are **static** (python
+scalars): ``temperature=0.0`` compiles to exactly ``argmax(logits)``,
+which is how greedy parity is retained bit for bit.
+
+The speculative-decoding accept/resample rule (`serve.spec`) reuses the
+same hash with distinct ``salt`` channels:
+
+* salt 0 — plain sampling / the bonus token after a fully-accepted
+  draft chunk,
+* salt 1 — the per-draft accept uniform ``u < p(x_draft)``,
+* salt 2 — the resample after a rejected draft (draft token masked).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "hash_u32",
+    "uniform",
+    "gumbel",
+    "filter_logits",
+    "token_probs",
+    "sample_tokens",
+    "categorical",
+]
+
+_GOLDEN = jnp.uint32(0x9E3779B9)
+
+
+def _mix(x: jax.Array) -> jax.Array:
+    """murmur3 fmix32: full-avalanche uint32 -> uint32."""
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_u32(seed, pos, salt=0, lane=0) -> jax.Array:
+    """Counter-based hash of (seed, pos, salt, lane) -> uint32.
+
+    All inputs broadcast; ``lane`` is the innermost counter (the vocab
+    id for Gumbel noise).  Chained fmix32 rounds with golden-ratio
+    offsets between stages decorrelate the four channels.
+    """
+    h = _mix(jnp.asarray(seed).astype(jnp.uint32) ^ _GOLDEN)
+    h = _mix(h ^ jnp.asarray(pos).astype(jnp.uint32) ^ _GOLDEN)
+    h = _mix(h ^ jnp.asarray(salt).astype(jnp.uint32) ^ _GOLDEN)
+    h = _mix(h ^ jnp.asarray(lane).astype(jnp.uint32))
+    return h
+
+
+def uniform(seed, pos, salt=0, lane=0) -> jax.Array:
+    """f32 uniform in [0, 1) from the top 24 hash bits (exact in f32)."""
+    return (hash_u32(seed, pos, salt, lane) >> 8).astype(
+        jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def gumbel(seed, pos, salt=0, lane=0) -> jax.Array:
+    """Standard Gumbel noise; the 2^-25 offset keeps log() finite at
+    u=0 without biasing any representable u > 0."""
+    u = uniform(seed, pos, salt, lane) + jnp.float32(2.0 ** -25)
+    return -jnp.log(-jnp.log(u))
+
+
+def filter_logits(logits: jax.Array, top_k: int, top_p: float) -> jax.Array:
+    """Mask logits outside the top-k / nucleus (top-p) set to -inf.
+
+    ``top_k=0`` disables the k filter; ``top_p=1.0`` disables the
+    nucleus filter (both are static).  Filters compose: top-k first,
+    then top-p over the surviving mass — the common "top_k then top_p"
+    convention.  Ties at the k-th logit keep the lowest vocab id
+    (stable argsort), matching across host/device by determinism of the
+    sort.
+    """
+    x = logits.astype(jnp.float32)
+    neg = jnp.float32(-jnp.inf)
+    V = x.shape[-1]
+    if top_k and top_k < V:
+        kth = jnp.sort(x, axis=-1)[..., V - top_k, None]
+        x = jnp.where(x >= kth, x, neg)
+    if top_p < 1.0:
+        srt = jnp.sort(x, axis=-1)[..., ::-1]  # descending
+        p = jax.nn.softmax(srt, axis=-1)
+        cum = jnp.cumsum(p, axis=-1)
+        # keep the smallest prefix with cumulative mass >= top_p; the
+        # cutoff logit is the last one whose *preceding* mass < top_p
+        keep = cum - p < jnp.float32(top_p)
+        cutoff = jnp.max(jnp.where(keep, srt, neg), axis=-1, keepdims=True)
+        x = jnp.where(x >= cutoff, x, neg)
+    return x
+
+
+def token_probs(logits: jax.Array, temperature: float, top_k: int,
+                top_p: float) -> jax.Array:
+    """Filtered softmax probabilities [..., V] f32 (temperature > 0)."""
+    x = filter_logits(logits, top_k, top_p) / jnp.float32(temperature)
+    return jax.nn.softmax(x, axis=-1)
+
+
+def sample_tokens(logits: jax.Array, seed: jax.Array, pos: jax.Array,
+                  temperature: float, top_k: int = 0, top_p: float = 1.0,
+                  salt: int = 0) -> jax.Array:
+    """Sample one token per row of ``logits [..., V]``.
+
+    ``seed``/``pos`` broadcast over the leading dims (one (request
+    seed, generated-token index) pair per row).  Static
+    ``temperature=0.0`` is exact greedy — same argmax, same
+    tie-breaking, no noise evaluated.
+    """
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    x = filter_logits(logits, top_k, top_p) / jnp.float32(temperature)
+    lanes = jnp.arange(x.shape[-1], dtype=jnp.uint32)
+    g = gumbel(jnp.asarray(seed)[..., None], jnp.asarray(pos)[..., None],
+               salt, lanes)
+    return jnp.argmax(x + g, axis=-1).astype(jnp.int32)
+
+
+def categorical(probs: jax.Array, seed: jax.Array, pos: jax.Array,
+                salt: int = 0) -> jax.Array:
+    """Gumbel-max draw from explicit probabilities [..., V] (zeros are
+    excluded exactly: log 0 = -inf).  Used by the speculative resample,
+    whose distribution is a *masked renormalized* p — Gumbel-max is
+    scale-invariant, so the unnormalized masked p works directly."""
+    x = jnp.log(probs.astype(jnp.float32))
+    lanes = jnp.arange(x.shape[-1], dtype=jnp.uint32)
+    g = gumbel(jnp.asarray(seed)[..., None], jnp.asarray(pos)[..., None],
+               salt, lanes)
+    return jnp.argmax(x + g, axis=-1).astype(jnp.int32)

@@ -270,7 +270,8 @@ def paged_kv_shardings(kv, mesh):
 # DeviceContinuousBatcher): a decode-state subtree under "decode" (or a
 # page pool under "pages"), flat per-slot arrays, per-request output
 # rings, and a scalar queue head.
-_SLOT_LEAVES = ("free", "req", "gen", "last", "hasf", "pos", "plen", "reg")
+_SLOT_LEAVES = ("free", "req", "gen", "last", "hasf", "pos", "plen",
+                "reg", "seed", "qidx")
 _RING_LEAVES = ("out_tok", "out_len", "out_done", "out_drop", "out_tbl")
 
 
@@ -282,7 +283,8 @@ def serve_pspec(path, leaf, mesh, batch: int) -> P:
       ``paged_cache_pspec`` (pages over data, within-page seq over
       model);
     * per-slot arrays (``free``/``req``/``gen``/``last``/``hasf``, the
-      paged ``pos``/``plen``/``reg``, the ``[B, F]`` gate features, the
+      sampling ``seed`` and queue-index ``qidx``, the paged
+      ``pos``/``plen``/``reg``, the ``[B, F]`` gate features, the
       ``[B, P]`` prompt buffer and the ``[B, n_ps]`` block table) shard
       their slot dim over data; the block table's page-list dim
       replicates;

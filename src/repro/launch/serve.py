@@ -96,6 +96,29 @@ def main(argv=None):
                     help="max prompt length; prompts are drawn with "
                          "variable length in [1, prompt-len] "
                          "(>1 needs --page-size)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: table-mapped draft "
+                         "tokens proposed per decoding slot per fused "
+                         "step (0 = off; needs --page-size and the "
+                         "device batcher; the LM verifies the whole "
+                         "chain in one chunked launch)")
+    ap.add_argument("--draft", default="pilot",
+                    choices=["pilot", "prompts"],
+                    help="draft-model training corpus for --spec-k: "
+                         "'pilot' serves a first greedy wave and trains "
+                         "the bigram table on what the LM actually "
+                         "emitted (router falls back to prompts); "
+                         "'prompts' trains on the prompt tokens only")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="on-device sampling temperature (0 = greedy, "
+                         "bit-identical to the pre-sampling serve path)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="sampling: keep only the k highest logits "
+                         "(0 = no top-k filter; needs --temperature > 0)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="sampling: nucleus filter to the smallest "
+                         "prefix with cumulative mass >= p (1.0 = off; "
+                         "needs --temperature > 0)")
     ap.add_argument("--mesh", default=None,
                     help="DATAxMODEL serve mesh (e.g. 1x8, 2x4) or 'auto'; "
                          "implies --continuous --router")
@@ -172,10 +195,25 @@ def main(argv=None):
                  "KV cache)")
     if args.shared_prefix_len and not args.share_prefix:
         ap.error("--shared-prefix-len needs --share-prefix")
+    if args.spec_k:
+        if not args.page_size:
+            ap.error("--spec-k needs --page-size (drafts verify through "
+                     "the chunked paged step)")
+        if not args.continuous:
+            ap.error("--spec-k needs --continuous")
+        if args.batcher == "host" and not args.router:
+            ap.error("--spec-k needs the device batcher")
+        if args.trace:
+            ap.error("--spec-k is incompatible with --trace (the "
+                     "schedule replay assumes one token per step)")
+    if (args.top_k or args.top_p < 1.0) and args.temperature == 0.0:
+        ap.error("--top-k/--top-p need --temperature > 0")
     scfg = ServeConfig(max_batch=args.batch, cache_len=64,
                        page_size=args.page_size, pages=args.pages,
                        share_prefix=args.share_prefix,
-                       kv_int8=args.kv_int8, attn_impl=args.attn_impl)
+                       kv_int8=args.kv_int8, attn_impl=args.attn_impl,
+                       temperature=args.temperature, top_k=args.top_k,
+                       top_p=args.top_p)
     if args.page_size:
         from ..nn import attn_backend as AB
         print(f"paged attention backend: {args.attn_impl} "
@@ -205,6 +243,43 @@ def main(argv=None):
     if args.continuous:
         ft = dict(max_retries=args.max_retries,
                   deadline_s=args.deadline_s, fault_injector=injector)
+        prefix = rng.integers(1, cfg.vocab_size,
+                              args.shared_prefix_len).tolist()
+        prompts = [
+            prefix + rng.integers(
+                1, cfg.vocab_size,
+                int(rng.integers(1, args.prompt_len + 1))).tolist()
+            for _ in range(args.requests)]
+        engine = None
+        if not args.router:
+            engine = ServeEngine(cfg, params, scfg, gate=gate,
+                                 gate_backend=args.gate_backend)
+        spec_draft = None
+        if args.spec_k:
+            from ..serve.spec import train_draft
+            chains = [list(p) for p in prompts]
+            if engine is not None and args.draft == "pilot":
+                # serve a first wave non-speculatively and train the
+                # draft on the streams the LM actually emitted — the
+                # draft imitates the LM, so pilot output beats a
+                # prompts-only corpus on acceptance rate
+                pilot = DeviceContinuousBatcher(
+                    engine, eos_token=-1, max_tokens=args.tokens,
+                    sync_every=args.sync_every,
+                    prefill_chunk=args.prefill_chunk)
+                n_pilot = min(args.batch, args.requests)
+                for rid in range(n_pilot):
+                    pilot.submit(rid, prompts[rid], features=feats[rid])
+                pilot_done = pilot.run(
+                    max_steps=100 * (args.tokens + args.prompt_len
+                                     + args.shared_prefix_len))
+                chains += [list(prompts[rid]) + list(toks)
+                           for rid, toks in pilot_done.items()]
+            spec_draft = train_draft(chains, vocab_size=cfg.vocab_size)
+            print(f"spec draft: bigram table over {cfg.vocab_size} "
+                  f"tokens, coverage "
+                  f"{spec_draft.meta.get('coverage', 0.0):.2f}, "
+                  f"{spec_draft.accounting()}")
         if args.router:
             from .mesh import make_serve_mesh
             mesh = make_serve_mesh(args.mesh or "auto")
@@ -214,18 +289,18 @@ def main(argv=None):
                               sync_every=args.sync_every,
                               rebalance_margin=args.rebalance_margin,
                               prefill_chunk=args.prefill_chunk,
-                              tracer=tracer, metrics=metrics, **ft)
+                              tracer=tracer, metrics=metrics,
+                              spec_k=args.spec_k, draft=spec_draft, **ft)
             print(f"router: {cb.n_shards} shard(s) over mesh "
                   f"{dict(mesh.shape)}")
         else:
-            engine = ServeEngine(cfg, params, scfg, gate=gate,
-                                 gate_backend=args.gate_backend)
             if args.batcher == "device":
                 cb = DeviceContinuousBatcher(
                     engine, eos_token=-1, max_tokens=args.tokens,
                     sync_every=args.sync_every,
                     prefill_chunk=args.prefill_chunk,
-                    tracer=tracer, metrics=metrics, **ft)
+                    tracer=tracer, metrics=metrics,
+                    spec_k=args.spec_k, draft=spec_draft, **ft)
             else:
                 cb = ContinuousBatcher(engine, eos_token=-1,
                                        max_tokens=args.tokens,
@@ -246,13 +321,6 @@ def main(argv=None):
             # snapshot whatever never reached a slot)
             handler = PreemptionHandler(
                 lambda: preempt_snapshot(cb, manager)).install()
-        prefix = rng.integers(1, cfg.vocab_size,
-                              args.shared_prefix_len).tolist()
-        prompts = [
-            prefix + rng.integers(
-                1, cfg.vocab_size,
-                int(rng.integers(1, args.prompt_len + 1))).tolist()
-            for _ in range(args.requests)]
         # budget covers prefill too: the host loop costs one step per
         # prompt token, so prompt-heavy waves need the longer horizon
         budget = 100 * (args.tokens + args.prompt_len
@@ -287,6 +355,16 @@ def main(argv=None):
         if args.router:
             print(f"  per-shard served: "
                   f"{[len(a) for a in cb.assigned]}")
+        if args.spec_k:
+            if args.router:
+                drafted = sum(b._spec_prop for b in cb.batchers)
+                accepted = sum(b._spec_acc for b in cb.batchers)
+            else:
+                st = cb.spec_stats()
+                drafted, accepted = st["drafted"], st["accepted"]
+            rate = accepted / drafted if drafted else 0.0
+            print(f"  speculative: k={args.spec_k}, drafted {drafted}, "
+                  f"accepted {accepted} (acceptance {rate:.2f})")
         if args.share_prefix:
             ratio = (cb.prefix_tokens_per_page() if args.router
                      else cb.pool.prefix_tokens_per_page())

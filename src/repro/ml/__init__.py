@@ -4,6 +4,7 @@ from .bnn import BinarizedMLP, bits_pm1
 from .forest import IsolationForest, RandomForestClassifier, XGBoostClassifier
 from .linear import Autoencoder, LinearSVM, PCA
 from .neighbors import KMeans, KNeighborsClassifier
+from .ngram import NGramModel
 from .tree import DecisionTreeClassifier, XGBRegressionTree
 
 MODEL_REGISTRY = {
@@ -11,6 +12,7 @@ MODEL_REGISTRY = {
     "rf": RandomForestClassifier,
     "xgb": XGBoostClassifier,
     "iforest": IsolationForest,
+    "ngram": NGramModel,
     "svm": LinearSVM,
     "nb": CategoricalNB,
     "kmeans": KMeans,
@@ -24,5 +26,5 @@ __all__ = [
     "DecisionTreeClassifier", "XGBRegressionTree", "RandomForestClassifier",
     "XGBoostClassifier", "IsolationForest", "LinearSVM", "PCA", "Autoencoder",
     "CategoricalNB", "KMeans", "KNeighborsClassifier", "BinarizedMLP",
-    "bits_pm1", "MODEL_REGISTRY",
+    "NGramModel", "bits_pm1", "MODEL_REGISTRY",
 ]

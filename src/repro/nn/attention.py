@@ -16,8 +16,7 @@ One implementation serves every assigned arch:
 from __future__ import annotations
 
 import dataclasses
-import warnings
-from typing import Dict, Optional, Tuple, Union
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -217,8 +216,8 @@ def _paged_write(kv: PagedKV, k: jax.Array, v: jax.Array) -> PagedKV:
 def paged_decode_attention_block(
     p: Dict,
     x: jax.Array,  # [B, C, D] chunk of current tokens' activations
-    kv: Union[PagedKV, jax.Array],  # PagedKV with view fields set
-    *legacy_args,
+    kv: PagedKV,  # PagedKV with view fields set
+    *,
     n_heads: int,
     n_kv_heads: int,
     head_dim: int,
@@ -226,9 +225,8 @@ def paged_decode_attention_block(
     window,
     qk_norm: bool,
     norm_eps: float,
-    kv_scales: Optional[Tuple[jax.Array, jax.Array]] = None,  # legacy only
     impl: str = "jnp",
-) -> Tuple:
+) -> Tuple[jax.Array, PagedKV]:
     """Chunked decode attention through a paged (block-table) KV cache.
 
     The serve-path analogue of ``decode_attention_block`` for the paged
@@ -273,46 +271,15 @@ def paged_decode_attention_block(
 
     Returns ``(out, new_kv)`` — ``new_kv`` keeps the caller's view
     fields, so layer loops can thread it without rebuilding the view.
-
-    .. deprecated::
-        The pre-PagedKV call shape ``(p, x, k_pages, v_pages,
-        block_tbl, positions, page_ids, page_off, ...,
-        kv_scales=(sk, sv))`` still works for one release: it warns,
-        rewraps into ``PagedKV``, and returns the legacy
-        ``(out, k_pages, v_pages[, (sk, sv)])`` tuple.
     """
     if not isinstance(kv, PagedKV):
-        if len(legacy_args) != 5:
-            raise TypeError(
-                "paged_decode_attention_block expects (p, x, PagedKV) or "
-                "the deprecated (p, x, k_pages, v_pages, block_tbl, "
-                f"positions, page_ids, page_off) shape; got kv={type(kv)} "
-                f"plus {len(legacy_args)} positional arguments")
-        warnings.warn(
-            "passing loose (k_pages, v_pages, block_tbl, positions, "
-            "page_ids, page_off[, kv_scales=...]) to "
-            "paged_decode_attention_block is deprecated; wrap the pool in "
+        raise TypeError(
+            "paged_decode_attention_block expects (p, x, PagedKV); the "
+            "pre-PagedKV loose-args call shape was removed after its "
+            "one-release deprecation window — wrap the pool in "
             "repro.nn.attn_backend.PagedKV and attach the view with "
-            ".with_view(block_tbl, positions, page_ids, page_off)",
-            DeprecationWarning, stacklevel=2)
-        v_pages, block_tbl, positions, page_ids, page_off = legacy_args
-        sk, sv = kv_scales if kv_scales is not None else (None, None)
-        wrapped = PagedKV(k=kv, v=v_pages, k_scale=sk, v_scale=sv,
-                          block_tbl=block_tbl, pos=positions,
-                          page_ids=page_ids, page_off=page_off)
-        out, new_kv = paged_decode_attention_block(
-            p, x, wrapped, n_heads=n_heads, n_kv_heads=n_kv_heads,
-            head_dim=head_dim, rope_theta=rope_theta, window=window,
-            qk_norm=qk_norm, norm_eps=norm_eps, impl=impl)
-        if kv_scales is not None:
-            return out, new_kv.k, new_kv.v, (new_kv.k_scale, new_kv.v_scale)
-        return out, new_kv.k, new_kv.v
-    if legacy_args:
-        raise TypeError("PagedKV carries the table/positions; extra "
-                        "positional arguments are not accepted")
-    if kv_scales is not None:
-        raise TypeError("kv_scales belongs to the deprecated call shape; "
-                        "a quantized PagedKV carries its own scale planes")
+            f".with_view(block_tbl, positions, page_ids, page_off) "
+            f"(got kv={type(kv)})")
     B, C, _ = x.shape
     q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim, kv.pos,
                            rope_theta, qk_norm, norm_eps)

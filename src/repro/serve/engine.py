@@ -64,6 +64,7 @@ import collections
 import dataclasses
 import heapq
 import time
+import zlib
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -71,6 +72,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..arch import model as M
+from ..arch import sampling as S
 from ..arch.config import ArchConfig
 from ..core.pipeline import MappedModel
 from ..dist import sharding as SH
@@ -115,8 +117,31 @@ class ServeConfig:
     # mode off-TPU — slow, correctness-leg only).  Never changes token
     # streams: backends are hard-gated bit-identical.
     attn_impl: str = "auto"
+    # on-device sampling (arch.sampling): STATIC python scalars, so
+    # temperature=0.0 compiles to exactly the seed argmax (greedy stays
+    # bit-identical, no noise evaluated).  temperature > 0 draws
+    # counter-based noise keyed by (request seed, generated-token
+    # index) — streams are invariant to batching, chunking, sync_every
+    # and wave boundaries, and identical on the host and device paths.
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
 
     def __post_init__(self):
+        if self.temperature < 0.0:
+            raise ValueError(
+                f"temperature must be >= 0 (0 = greedy), got "
+                f"{self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(
+                f"top_p must be in (0, 1], got {self.top_p}")
+        if self.temperature == 0.0 and (self.top_k or self.top_p < 1.0):
+            raise ValueError(
+                "top_k/top_p filter a sampling distribution; with "
+                "temperature=0 decoding is exact greedy argmax — set "
+                "temperature > 0 to enable the filters")
         if self.page_size:
             if self.cache_len % self.page_size:
                 raise ValueError(
@@ -219,6 +244,16 @@ def validate_prompt_or_drop(scfg: ServeConfig, request_id, prompt_tokens,
         raise
 
 
+def _default_seed(request_id) -> int:
+    """Deterministic per-request sampling seed when ``submit()`` passes
+    none: a CRC32 of the request id's repr, resolved AT SUBMIT TIME so
+    the host batcher, the device batcher and the router's failover
+    replay all derive the same stream for the same request.  Hashing
+    the id (instead of a shared constant) decorrelates the default
+    streams of distinct requests."""
+    return zlib.crc32(repr(request_id).encode()) & 0x7FFFFFFF
+
+
 def _drop_request(b, rid, reason: str, now: Optional[float] = None,
                   trace: bool = True) -> None:
     """Shared terminal-drop bookkeeping for both batchers: reason +
@@ -295,22 +330,30 @@ class ServeEngine:
 
     def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig,
                  gate: Optional[MappedModel] = None,
-                 gate_backend: str = "jnp", mesh=None):
+                 gate_backend: str = "jnp", mesh=None,
+                 tp_params: bool = False):
         self.cfg = cfg
         self.mesh = mesh
+        self.tp_params = bool(tp_params)
         if mesh is not None:
-            # place once: params REPLICATED across the shard's devices,
-            # the decode cache per `dist.sharding.cache_pspec` (batch
-            # over data, KV sequence over model).  Tensor-parallel param
-            # sharding is deliberately not used on the serve path: the
+            # place once: params REPLICATED across the shard's devices
+            # by default, the decode cache per
+            # `dist.sharding.cache_pspec` (batch over data, KV sequence
+            # over model).  Tensor-parallel param sharding
+            # (``tp_params=True``) is opt-in on the serve path: the
             # row-parallel psum reassociates the hidden-dim reduction
-            # and flips bf16 greedy argmaxes at deeper cache positions,
-            # breaking the bit-exact parity guarantee the serve bench
-            # asserts.  Replicated params + seq-sharded KV is bit-exact.
+            # and can flip bf16 greedy argmaxes at deeper cache
+            # positions, so TP runs are gated on a token-flip *rate*
+            # (``serve_bench --parity-tol``) instead of the bit-exact
+            # parity the replicated placement guarantees.
             from jax.sharding import NamedSharding, PartitionSpec
 
-            params = jax.device_put(
-                params, NamedSharding(mesh, PartitionSpec()))
+            if tp_params:
+                params = jax.device_put(
+                    params, SH.param_shardings(params, mesh))
+            else:
+                params = jax.device_put(
+                    params, NamedSharding(mesh, PartitionSpec()))
         self.params = params
         self.scfg = scfg
         self.gate = gate
@@ -351,6 +394,12 @@ class ServeEngine:
             self._paged_sample = jax.jit(
                 lambda p, kv, tbl, pos, t, n: M.paged_decode_step(
                     p, kv, tbl, pos, t, n, cfg, sample_greedy=True,
+                    attn_impl=scfg.attn_impl))
+            # logits variant for temperature > 0: the host batcher
+            # samples from these with its own per-slot seeds/indices
+            self._paged_logits = jax.jit(
+                lambda p, kv, tbl, pos, t, n: M.paged_decode_step(
+                    p, kv, tbl, pos, t, n, cfg,
                     attn_impl=scfg.attn_impl))
             # COW: seed a request's fresh tail page with a copy of a
             # shared page (all layers, every pool leaf incl. scales)
@@ -412,6 +461,16 @@ class ServeEngine:
             jnp.asarray(pos, jnp.int32), jnp.asarray(tokens, jnp.int32),
             jnp.asarray(n_new, jnp.int32))
         return nxt
+
+    def step_paged_logits(self, tokens: np.ndarray, block_tbl: np.ndarray,
+                          pos: np.ndarray, n_new: np.ndarray):
+        """Chunked paged step returning last-position logits per slot
+        (the host batcher's sampling path, ``temperature > 0``)."""
+        logits, self._paged_kv = self._paged_logits(
+            self.params, self.paged_kv, jnp.asarray(block_tbl, jnp.int32),
+            jnp.asarray(pos, jnp.int32), jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(n_new, jnp.int32))
+        return logits
 
     # ------------------------------------------------------------ admission
     def admit(self, features: np.ndarray) -> np.ndarray:
@@ -531,6 +590,16 @@ class ContinuousBatcher:
         self.slot_gen: list = [[] for _ in range(B)]
         self.slot_req: list = [None] * B
         self.slot_feat: Optional[np.ndarray] = None  # [B, F] once known
+        # per-request sampling seeds (resolved at submit; _default_seed
+        # when the caller passes none) + the per-slot mirror the
+        # sampler reads.  temperature == 0 never touches either.
+        self.seeds: dict = {}
+        self.slot_seed = np.zeros(B, np.int32)
+        self._sampler = None
+        if scfg.temperature > 0.0:
+            t, k, p = scfg.temperature, scfg.top_k, scfg.top_p
+            self._sampler = jax.jit(
+                lambda lg, sd, gi: S.sample_tokens(lg, sd, gi, t, k, p))
         self.queue: collections.deque = collections.deque()
         self.done: dict = {}
         self.done_at: dict = {}  # request_id -> perf_counter at completion
@@ -569,14 +638,19 @@ class ContinuousBatcher:
 
     def submit(self, request_id, prompt_tokens,
                features: Optional[np.ndarray] = None,
-               deadline_s: Optional[float] = None):
+               deadline_s: Optional[float] = None,
+               seed: Optional[int] = None):
         """Enqueue a request.  ``prompt_tokens`` is a token sequence (a
         bare int is accepted as a length-1 prompt); the host loop feeds
         it one token per step — the measured token-by-token baseline the
         chunked device path is benchmarked against.  ``deadline_s``
         (falls back to the batcher default) bounds queue + serve time:
         an already-expired budget drops at admission, a mid-flight
-        expiry evicts the slot at the next drain boundary."""
+        expiry evicts the slot at the next drain boundary.  ``seed``
+        keys the request's sampling noise when ``temperature > 0``
+        (default: a deterministic hash of the request id)."""
+        self.seeds[request_id] = (int(seed) if seed is not None
+                                  else _default_seed(request_id))
         try:
             prompt = validate_prompt_or_drop(
                 self.engine.scfg, request_id, prompt_tokens,
@@ -653,6 +727,7 @@ class ContinuousBatcher:
             self.queue.popleft()
             self.slot_free[b] = False
             self.slot_req[b] = rid
+            self.slot_seed[b] = self.seeds.get(rid, _default_seed(rid))
             if self.tracer is not None:
                 self.tracer.admitted(rid, t=now, shard=self.trace_shard)
             self.slot_prompt[b] = prompt
@@ -733,14 +808,29 @@ class ContinuousBatcher:
                 ptr, prompt = self.slot_ptr[b], self.slot_prompt[b]
                 tok[b] = (prompt[ptr] if ptr < len(prompt)
                           else self.slot_gen[b][-1])
+            sampler = self._sampler
+            gi = (np.array([len(self.slot_gen[b]) for b in range(B)],
+                           np.int32) if sampler is not None else None)
             if paged:
-                nxt = np.asarray(self.engine.step_paged(
-                    tok[:, None], self.slot_tbl, self.slot_pos,
-                    (~self.slot_free).astype(np.int32)))
+                if sampler is None:
+                    nxt = np.asarray(self.engine.step_paged(
+                        tok[:, None], self.slot_tbl, self.slot_pos,
+                        (~self.slot_free).astype(np.int32)))
+                else:
+                    # sample on the last-position logits, keyed by
+                    # (request seed, generated-token index) — mid-prompt
+                    # draws are discarded below exactly like argmaxes
+                    logits = self.engine.step_paged_logits(
+                        tok[:, None], self.slot_tbl, self.slot_pos,
+                        (~self.slot_free).astype(np.int32))
+                    nxt = np.asarray(sampler(logits, self.slot_seed, gi))
             else:
                 logits, _ = self.engine.step(
                     tok[:, None], self.slot_feat if use_gate else None)
-                nxt = np.asarray(logits.argmax(axis=-1))
+                if sampler is None:
+                    nxt = np.asarray(logits.argmax(axis=-1))
+                else:
+                    nxt = np.asarray(sampler(logits, self.slot_seed, gi))
             now = self._clock()
             if inj is not None:
                 # fault injection lives HERE, at the host drain boundary
@@ -841,7 +931,8 @@ class DeviceContinuousBatcher:
                  retry_backoff: int = 1,
                  deadline_s: Optional[float] = None,
                  fault_injector=None,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 spec_k: int = 0, draft=None):
         self.engine = engine
         self.eos = int(eos_token)
         self.max_tokens = int(max_tokens)
@@ -849,6 +940,37 @@ class DeviceContinuousBatcher:
         self.pregate = pregate
         self.prefill_chunk = max(1, int(prefill_chunk))
         self.max_queue = max_queue
+        # speculative decoding: a table-mapped draft (serve.spec) drafts
+        # ``spec_k`` tokens per decoding slot inside the fused step; the
+        # LM verifies the whole chain in one chunked launch.  Greedy
+        # (temperature=0) verification is exact — accepted tokens are
+        # bit-identical to non-speculative decode; temperature>0 uses
+        # the standard rejection-sampling rule (marginal per token is
+        # exactly the target distribution).
+        self.spec_k = int(spec_k)
+        self.draft = draft
+        self._draft_tbl = None
+        if self.spec_k:
+            if self.spec_k < 1:
+                raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+            if not engine.scfg.paged:
+                raise ValueError(
+                    "speculative decoding verifies drafts through the "
+                    "chunked paged step: set ServeConfig(page_size=...)")
+            if draft is None:
+                raise ValueError(
+                    "spec_k > 0 needs a compiled draft model "
+                    "(serve.spec.train_draft / compile_draft)")
+            if draft.vocab_size < engine.cfg.vocab_size:
+                raise ValueError(
+                    f"draft table covers {draft.vocab_size} tokens but "
+                    f"the LM vocab is {engine.cfg.vocab_size}")
+            self._draft_tbl = draft.device_table()
+        # host-side speculative accounting, synced from the device
+        # counters at the end of each run()
+        self._spec_prop = 0
+        self._spec_acc = 0
+        self.seeds: dict = {}
         # failure handling (all host-side, applied at sync boundaries):
         # queue-full retry budget, default deadline, drain-boundary
         # fault injector, injectable clock for deterministic tests
@@ -925,7 +1047,8 @@ class DeviceContinuousBatcher:
 
     def submit(self, request_id, prompt_tokens,
                features: Optional[np.ndarray] = None,
-               deadline_s: Optional[float] = None):
+               deadline_s: Optional[float] = None,
+               seed: Optional[int] = None):
         """Enqueue; admission happens batched in ``run()``.
 
         ``prompt_tokens`` is a token sequence (bare int = length-1
@@ -934,8 +1057,13 @@ class DeviceContinuousBatcher:
         accepts single-token prompts only.  ``deadline_s`` (falls back
         to the batcher default) bounds queue + serve time: an expired
         budget drops at admission (wave build) and a mid-flight expiry
-        evicts the slot at the next sync boundary.
+        evicts the slot at the next sync boundary.  ``seed`` keys the
+        request's sampling noise when ``temperature > 0`` (default: a
+        deterministic hash of the request id, matching the host
+        batcher and the router's failover replay).
         """
+        self.seeds[request_id] = (int(seed) if seed is not None
+                                  else _default_seed(request_id))
         try:
             prompt = validate_prompt_or_drop(
                 self.engine.scfg, request_id, prompt_tokens,
@@ -981,6 +1109,18 @@ class DeviceContinuousBatcher:
         free iff no live slot and no cached prefix references it)."""
         return self.pool.ref == 0
 
+    def spec_stats(self) -> dict:
+        """Cumulative speculative-decoding accounting: drafted tokens,
+        accepted tokens, and the acceptance rate (the fraction of draft
+        positions the LM verified — the speedup driver)."""
+        prop = int(self._spec_prop)
+        return {
+            "spec_k": self.spec_k,
+            "drafted": prop,
+            "accepted": int(self._spec_acc),
+            "acceptance_rate": (self._spec_acc / prop) if prop else 0.0,
+        }
+
     # ------------------------------------------------------------- step fn
     def _make_run_k(self, n_queue: int, n_out: int, n_feat: int) -> Callable:
         # NOTE: tracing adds NOTHING here.  The traced path runs this
@@ -990,10 +1130,12 @@ class DeviceContinuousBatcher:
         # outcomes — see the `traced` block in run().
         cfg = self.engine.cfg
         gate_fn = self.engine.gate_fn
-        drop = self.engine.scfg.gate_action_drop
+        scfg = self.engine.scfg
+        drop = scfg.gate_action_drop
+        temp, top_k, top_p = scfg.temperature, scfg.top_k, scfg.top_p
         eos, max_tokens, Nq, R = self.eos, self.max_tokens, n_queue, n_out
 
-        def one_step(params, qtok, qreq, qfeat, qhasf, nq, st):
+        def one_step(params, qtok, qreq, qfeat, qhasf, qseed, nq, st):
             # --- fill freed slots from the device queue (FIFO, ascending
             # slot index — the reference batcher's order); qreq maps a
             # queue entry to its output row (carryover rows come first)
@@ -1008,6 +1150,7 @@ class DeviceContinuousBatcher:
                 last=jnp.where(take, qtok[idx], st["last"]),
                 feat=jnp.where(take[:, None], qfeat[idx], st["feat"]),
                 hasf=jnp.where(take, qhasf[idx], st["hasf"]),
+                seed=jnp.where(take, qseed[idx], st["seed"]),
                 gen=jnp.where(take, 0, st["gen"]),
                 free=free & ~take,
                 head=st["head"] + take.sum(),
@@ -1018,8 +1161,17 @@ class DeviceContinuousBatcher:
                 free, req, gen = st["free"], st["req"], st["gen"]
                 active = ~free
                 tok = jnp.where(free, 0, st["last"])[:, None]
-                nxt, dec = M.decode_step(params, st["decode"], tok, cfg,
-                                         sample_greedy=True)
+                if temp == 0.0:
+                    nxt, dec = M.decode_step(params, st["decode"], tok,
+                                             cfg, sample_greedy=True)
+                else:
+                    # sample keyed by (request seed, generated index):
+                    # the stream is a pure function of the request, so
+                    # sync_every / wave boundaries can't perturb it
+                    logits, dec = M.decode_step(params, st["decode"],
+                                                tok, cfg)
+                    nxt = S.sample_tokens(logits, st["seed"], gen,
+                                          temp, top_k, top_p)
                 # slot-level admission: the fused gate's verdict evicts a
                 # just-filled slot before its first token is recorded
                 if gate_fn is not None:
@@ -1054,7 +1206,7 @@ class DeviceContinuousBatcher:
             st = jax.lax.cond(work, decode_and_evict, lambda s: s, st)
             return st, work
 
-        def run_k(params, st, qtok, qreq, qfeat, qhasf, nq, k):
+        def run_k(params, st, qtok, qreq, qfeat, qhasf, qseed, nq, k):
             # k is traced: the host passes min(sync_every, steps
             # left) so max_steps is honoured exactly (no overshoot)
             def cond(c):
@@ -1064,7 +1216,7 @@ class DeviceContinuousBatcher:
             def body(c):
                 i, st, _ = c
                 st, alive = one_step(params, qtok, qreq, qfeat,
-                                     qhasf, nq, st)
+                                     qhasf, qseed, nq, st)
                 return i + 1, st, alive
 
             _, st, alive = jax.lax.while_loop(
@@ -1112,13 +1264,18 @@ class DeviceContinuousBatcher:
         drop = scfg.gate_action_drop
         eos, max_tokens, Nq, R = self.eos, self.max_tokens, n_queue, n_out
         C = self.prefill_chunk
+        SK = self.spec_k  # draft tokens per decoding slot per step
+        Call = max(C, SK + 1) if SK else C  # chunk width of one launch
+        dtable = self._draft_tbl
+        V = self._vocab
+        temp, top_k, top_p = scfg.temperature, scfg.top_k, scfg.top_p
         n_ps, N = scfg.pages_per_slot, scfg.n_pages
         page = scfg.page_size
         share = scfg.share_prefix
         attn_impl = scfg.attn_impl
 
         def one_step(params, qtok, qlen, qreq, qfeat, qhasf, qsh, qdem,
-                     qstart, qcow, qreg, nq, st):
+                     qstart, qcow, qreg, qseed, qwsrc, qwneed, nq, st):
             # --- fill + page reservation (FIFO, ascending slot index)
             free = st["free"]
             B = free.shape[0]
@@ -1126,6 +1283,28 @@ class DeviceContinuousBatcher:
             cand = st["head"] + rank
             idx = jnp.clip(cand, 0, Nq - 1)
             in_q = free & (cand < nq)
+            if share:
+                # in-wave prefix sharing: a queue entry that READS pages
+                # another entry of this wave WRITES (its writer, queue
+                # index ``qwsrc``) may only be admitted once the writer
+                # has filled the read chain — i.e. the writer's position
+                # has reached ``qwneed`` tokens, or the writer already
+                # finished (``wdone`` latch).  The cumprod keeps the
+                # FIFO-prefix rule: a blocked entry blocks everything
+                # behind it (no leapfrogging).
+                wsrc = qwsrc[idx]
+                wneed = qwneed[idx]
+                live_ok = ((~st["free"])[None, :]
+                           & (st["qidx"][None, :] == wsrc[:, None])
+                           & (st["pos"][None, :] >= wneed[:, None])
+                           ).any(axis=1)
+                wait_ok = ((wsrc < 0)
+                           | st["wdone"][jnp.clip(wsrc, 0, Nq - 1)]
+                           | live_ok)
+                ok = jnp.cumprod(
+                    jnp.where(in_q, wait_ok, True).astype(jnp.int32)
+                ).astype(bool)
+                in_q = in_q & ok
             # own-page demand: the reservation formula minus the pages
             # the prefix trie already holds (precomputed at wave build,
             # the same rule submit-side validation enforces)
@@ -1164,6 +1343,9 @@ class DeviceContinuousBatcher:
                     st["pages"])
             else:
                 pages = st["pages"]
+            extra = {}
+            if share:
+                extra["qidx"] = jnp.where(take, idx, st["qidx"])
             st = dict(
                 st,
                 req=jnp.where(take, qreq[idx], st["req"]),
@@ -1175,11 +1357,13 @@ class DeviceContinuousBatcher:
                 hasf=jnp.where(take, qhasf[idx], st["hasf"]),
                 gen=jnp.where(take, 0, st["gen"]),
                 reg=jnp.where(take, qreg[idx], st["reg"]),
+                seed=jnp.where(take, qseed[idx], st["seed"]),
                 free=free & ~take,
                 head=st["head"] + take.sum(),
                 tbl=jnp.where(take[:, None], tbl_new, st["tbl"]),
                 pref=pref,
                 pages=pages,
+                **extra,
             )
             work = (~st["free"]).any()
 
@@ -1189,21 +1373,33 @@ class DeviceContinuousBatcher:
                 active = ~free
                 rem = plen - pos
                 prefilling = active & (rem > 0)
+                decoding = active & ~prefilling
+                if SK:
+                    # decoding slots run a draft chain of up to SK+1
+                    # tokens (``last`` + SK table drafts), capped so an
+                    # all-accept step never overshoots max_tokens
+                    c_dec = jnp.clip(max_tokens - gen, 1, SK + 1)
+                else:
+                    c_dec = jnp.ones_like(gen)
                 c = jnp.where(
                     active,
-                    jnp.where(prefilling, jnp.minimum(C, rem), 1), 0)
-                jj = jnp.arange(C)[None]
+                    jnp.where(prefilling, jnp.minimum(C, rem), c_dec), 0)
+                jj = jnp.arange(Call)[None]
                 gidx = jnp.clip(pos[:, None] + jj, 0, p_max - 1)
                 ptoks = jnp.take_along_axis(st["pbuf"], gidx, axis=1)
-                chunk = jnp.where(
-                    prefilling[:, None], ptoks,
-                    jnp.where(jj == 0, st["last"][:, None], 0))
+                if SK:
+                    # draft chain: successive successor-table gathers
+                    # from the rolling last token
+                    dr = [st["last"]]
+                    for _ in range(Call - 1):
+                        dr.append(dtable[jnp.clip(dr[-1], 0, V - 1)])
+                    dchain = jnp.stack(dr, axis=1)
+                    chunk = jnp.where(prefilling[:, None], ptoks, dchain)
+                else:
+                    chunk = jnp.where(
+                        prefilling[:, None], ptoks,
+                        jnp.where(jj == 0, st["last"][:, None], 0))
                 chunk = jnp.where(jj < c[:, None], chunk, 0)
-                nxt, pages = M.paged_decode_step(
-                    params, st["pages"], st["tbl"], pos, chunk, c, cfg,
-                    sample_greedy=True, attn_impl=attn_impl)
-                pos = pos + c
-                rec = active & (pos >= plen)  # prompt consumed: record
                 if gate_fn is not None:
                     labels = gate_fn(st["feat"])
                     gdrop = active & st["hasf"] & (labels == drop)
@@ -1211,13 +1407,132 @@ class DeviceContinuousBatcher:
                     gdrop = jnp.zeros_like(free)
                 out_drop = st["out_drop"].at[
                     jnp.where(gdrop, req, R)].set(True, mode="drop")
-                live = rec & ~gdrop
-                widx = jnp.where(live, req, R)
-                out_tok = st["out_tok"].at[
-                    widx, jnp.minimum(gen, max_tokens - 1)].set(
-                        nxt, mode="drop")
-                gen = gen + live.astype(jnp.int32)
-                fin = live & ((gen >= max_tokens) | (nxt == eos))
+                if SK == 0 and temp == 0.0:
+                    nxt, pages = M.paged_decode_step(
+                        params, st["pages"], st["tbl"], pos, chunk, c,
+                        cfg, sample_greedy=True, attn_impl=attn_impl)
+                elif SK == 0:
+                    logits, pages = M.paged_decode_step(
+                        params, st["pages"], st["tbl"], pos, chunk, c,
+                        cfg, attn_impl=attn_impl)
+                    nxt = S.sample_tokens(logits, st["seed"], gen,
+                                          temp, top_k, top_p)
+                if SK == 0:
+                    pos = pos + c
+                    rec = active & (pos >= plen)  # prompt consumed
+                    live = rec & ~gdrop
+                    widx = jnp.where(live, req, R)
+                    out_tok = st["out_tok"].at[
+                        widx, jnp.minimum(gen, max_tokens - 1)].set(
+                            nxt, mode="drop")
+                    gen = gen + live.astype(jnp.int32)
+                    fin = live & ((gen >= max_tokens) | (nxt == eos))
+                else:
+                    # --- speculative verify: one chunked launch scores
+                    # every chain position (the chunked-prefill kernel
+                    # *is* the verify primitive)
+                    if temp == 0.0:
+                        tok_all, pages = M.paged_decode_step(
+                            params, st["pages"], st["tbl"], pos, chunk,
+                            c, cfg, sample_greedy=True,
+                            all_positions=True, attn_impl=attn_impl)
+                    else:
+                        logits_all, pages = M.paged_decode_step(
+                            params, st["pages"], st["tbl"], pos, chunk,
+                            c, cfg, all_positions=True,
+                            attn_impl=attn_impl)
+                    jm = jnp.arange(Call - 1)[None]
+                    if temp == 0.0:
+                        # greedy: accept the longest draft prefix that
+                        # matches the LM argmax at the previous position;
+                        # position acc then holds the LM's correction —
+                        # bit-identical to sequential greedy decode
+                        match = ((chunk[:, 1:] == tok_all[:, :-1])
+                                 & (jm < (c - 1)[:, None]))
+                        acc = jnp.cumprod(
+                            match.astype(jnp.int32), axis=1).sum(axis=1)
+                        E = tok_all
+                        tok_first = jnp.take_along_axis(
+                            tok_all,
+                            jnp.clip(c - 1, 0, Call - 1)[:, None],
+                            axis=1)[:, 0]
+                    else:
+                        # standard rejection sampling: accept draft j
+                        # with prob p(d_j); on first rejection resample
+                        # from the masked renormalized distribution; on
+                        # full accept draw the bonus token.  Noise is
+                        # keyed on (seed, generated-index) so streams
+                        # are invariant to acceptance history length.
+                        probs = S.token_probs(logits_all, temp,
+                                              top_k, top_p)
+                        Vp = probs.shape[-1]
+                        u = S.uniform(st["seed"][:, None],
+                                      gen[:, None] + jm, salt=1)
+                        p_acc = jnp.take_along_axis(
+                            probs[:, :-1, :],
+                            jnp.clip(chunk[:, 1:, None], 0, Vp - 1),
+                            axis=2)[..., 0]
+                        amask = (u < p_acc) & (jm < (c - 1)[:, None])
+                        acc = jnp.cumprod(
+                            amask.astype(jnp.int32), axis=1).sum(axis=1)
+                        full = acc >= c - 1
+                        fidx_r = jnp.where(
+                            decoding, jnp.clip(acc, 0, Call - 1),
+                            jnp.clip(c - 1, 0, Call - 1))
+                        l_fin = jnp.take_along_axis(
+                            logits_all, fidx_r[:, None, None],
+                            axis=1)[:, 0]
+                        p_fin = jnp.take_along_axis(
+                            probs, fidx_r[:, None, None], axis=1)[:, 0]
+                        kpos = gen + jnp.where(decoding, acc, 0)
+                        bonus = S.sample_tokens(l_fin, st["seed"], kpos,
+                                                temp, top_k, top_p)
+                        x_rej = jnp.take_along_axis(
+                            chunk,
+                            jnp.clip(acc + 1, 0, Call - 1)[:, None],
+                            axis=1)[:, 0]
+                        lanes = jnp.arange(Vp)[None]
+                        p_masked = jnp.where(lanes == x_rej[:, None],
+                                             jnp.float32(0.0), p_fin)
+                        resamp = S.categorical(p_masked, st["seed"],
+                                               kpos, salt=2)
+                        final = jnp.where(decoding & ~full,
+                                          resamp, bonus)
+                        dshift = jnp.concatenate(
+                            [chunk[:, 1:],
+                             jnp.zeros((B, 1), chunk.dtype)], axis=1)
+                        E = jnp.where(jj < acc[:, None], dshift, 0)
+                        E = jnp.where(jj == acc[:, None],
+                                      final[:, None], E)
+                        tok_first = final
+                    m0 = acc + 1  # accepted drafts + 1 emitted token
+                    # truncate the emission at the first EOS
+                    eosj = jnp.where((E == eos) & (jj < m0[:, None]),
+                                     jj, Call)
+                    e1 = eosj.min(axis=1)
+                    m = jnp.where(e1 < Call,
+                                  jnp.minimum(m0, e1 + 1), m0)
+                    pos = jnp.where(decoding, pos + m, pos + c)
+                    rec = active & (pos >= plen)  # prompt consumed
+                    live = rec & ~gdrop
+                    me = jnp.where(live,
+                                   jnp.where(decoding, m, 1), 0)
+                    Erow = jnp.where(decoding[:, None], E,
+                                     tok_first[:, None])
+                    widx = jnp.where(live, req, R)
+                    col = jnp.where(jj < me[:, None],
+                                    gen[:, None] + jj, max_tokens)
+                    out_tok = st["out_tok"].at[
+                        widx[:, None], col].set(Erow, mode="drop")
+                    nxt = jnp.take_along_axis(
+                        Erow, jnp.clip(me - 1, 0, Call - 1)[:, None],
+                        axis=1)[:, 0]
+                    gen = gen + me
+                    fin = live & ((gen >= max_tokens) | (nxt == eos))
+                    spec_prop = st["spec_prop"] + jnp.where(
+                        decoding & live, c - 1, 0).sum()
+                    spec_acc = st["spec_acc"] + jnp.where(
+                        decoding & live, acc, 0).sum()
                 evict = gdrop | fin
                 # drop one reference per table page; a completed reg
                 # slot's full-prompt pages keep theirs (it becomes the
@@ -1229,6 +1544,16 @@ class DeviceContinuousBatcher:
                 pref = st["pref"].at[
                     jnp.where(dec, st["tbl"], N)].add(-1, mode="drop")
                 fidx = jnp.where(fin, req, R)
+                tail = {}
+                if share:
+                    # latch completion of this slot's queue entry so
+                    # in-wave readers admitted later can proceed
+                    tail["wdone"] = st["wdone"].at[
+                        jnp.where(fin & (st["qidx"] >= 0),
+                                  st["qidx"], Nq)].set(True, mode="drop")
+                if SK:
+                    tail["spec_prop"] = spec_prop
+                    tail["spec_acc"] = spec_acc
                 return dict(
                     st,
                     pages=pages,
@@ -1244,13 +1569,15 @@ class DeviceContinuousBatcher:
                     out_drop=out_drop,
                     out_tbl=st["out_tbl"].at[fidx].set(
                         st["tbl"], mode="drop"),
+                    **tail,
                 )
 
             st = jax.lax.cond(work, decode_and_evict, lambda s: s, st)
             return st, work
 
         def run_k(params, st, qtok, qlen, qreq, qfeat, qhasf, qsh,
-                  qdem, qstart, qcow, qreg, nq, k):
+                  qdem, qstart, qcow, qreg, qseed, qwsrc, qwneed,
+                  nq, k):
             def cond(carry):
                 i, _, alive = carry
                 return (i < k) & alive
@@ -1259,7 +1586,7 @@ class DeviceContinuousBatcher:
                 i, st, _ = carry
                 st, alive = one_step(params, qtok, qlen, qreq, qfeat,
                                      qhasf, qsh, qdem, qstart, qcow,
-                                     qreg, nq, st)
+                                     qreg, qseed, qwsrc, qwneed, nq, st)
                 return i + 1, st, alive
 
             _, st, alive = jax.lax.while_loop(
@@ -1399,6 +1726,12 @@ class DeviceContinuousBatcher:
             if not pending:
                 return self.done
         eng = self.engine
+        traced = self.tracer is not None
+        if traced and self.spec_k:
+            raise ValueError(
+                "speculative decoding is unsupported on a traced run: "
+                "the schedule replay assumes one emitted token per "
+                "decode step, which an accepted draft chunk violates")
         # batched admission: ONE gate launch over the whole waiting queue
         keep = np.ones(len(pending), bool)
         gated = [i for i, (_, _, f) in enumerate(pending) if f is not None]
@@ -1443,10 +1776,13 @@ class DeviceContinuousBatcher:
             qstart = np.zeros(Nq, np.int32)
             qcow = np.full(Nq, NP, np.int32)
             qreg = np.zeros(Nq, bool)
+            qwsrc = np.full(Nq, -1, np.int32)  # in-wave writer queue idx
+            qwneed = np.zeros(Nq, np.int32)  # tokens writer must reach
             self.pool.begin_wave()
         else:
             qtok = np.zeros(Nq, np.int32)
         qreq = np.zeros(Nq, np.int32)
+        qseed = np.zeros(Nq, np.int32)
         qfeat = np.zeros((Nq, n_feat), np.int32)
         qhasf = np.zeros(Nq, bool)
         # qi -> (prompt, register-on-completion) for drain registration
@@ -1454,7 +1790,8 @@ class DeviceContinuousBatcher:
             (c["prompt"], c.get("reg", False)) if self.paged else ([], False)
             for _, c in carry]
         wplans: List = []  # kept-index -> PagePlan (stats at drain)
-        for k, (_, prompt, f) in enumerate(kept):
+        for k, (rid, prompt, f) in enumerate(kept):
+            qseed[k] = self.seeds.get(rid, _default_seed(rid))
             if self.paged:
                 qtok[k, : len(prompt)] = prompt
                 qlen[k] = len(prompt)
@@ -1476,6 +1813,8 @@ class DeviceContinuousBatcher:
             if f is not None:
                 qfeat[k, : len(f)] = f[:n_feat]
                 qhasf[k] = True
+        wave_pins: List[int] = []  # host pins on in-wave shared pages
+        wave_deps = False  # any reader waiting on an in-wave writer?
         if self.paged and eng.scfg.share_prefix:
             # pressure-release cached prefixes (LRU leaf-first) so the
             # wave's largest own-demand can eventually be met; pages the
@@ -1483,6 +1822,80 @@ class DeviceContinuousBatcher:
             keep_pin = set(int(p) for p in qsh[qsh < NP])
             keep_pin |= set(int(p) for p in qcow[qcow < NP])
             self.pool.ensure_free(int(qdem.max(initial=0)), keep_pin)
+            if not traced:
+                # --- in-wave prefix sharing: cold entries (no cache
+                # hit) of THIS wave with identical full-page prefixes
+                # share pages from wave 0 instead of only benefiting
+                # after one of them completes and registers.  The first
+                # entry owning a prefix node WRITES it during prefill;
+                # later entries READ it (their fused-step admission
+                # waits until the writer's position covers the read
+                # chain).  Disabled under tracing: the schedule replay
+                # does not model admission waits.
+                page = eng.scfg.page_size
+                cold = [k for k in range(n)
+                        if qstart[k] == 0 and qcow[k] == NP
+                        and bool((qsh[k] >= NP).all())
+                        and len(kept[k][1]) >= page]
+                counts: Dict[tuple, int] = {}
+                keys_of: Dict[int, list] = {}
+                for k in cold:
+                    prompt = kept[k][1]
+                    # node depths mirror pool._lookup: a shared page
+                    # must not cover the final prompt token (the last
+                    # token's KV is written at first decode)
+                    keys = [tuple(prompt[: (d + 1) * page])
+                            for d in range(len(prompt))
+                            if (d + 1) * page <= len(prompt) - 1]
+                    keys_of[k] = keys
+                    for key2 in keys:
+                        counts[key2] = counts.get(key2, 0) + 1
+                owner: Dict[tuple, int] = {}
+                claims: list = []  # node keys in claim (alloc) order
+                plan_sh: Dict[int, Tuple[int, int, int]] = {}
+                for k in cold:
+                    keys = [k2 for k2 in keys_of[k] if counts[k2] >= 2]
+                    if not keys:
+                        continue
+                    # nodes already owned by an earlier entry form a
+                    # contiguous prefix of this chain (sharing a depth-d
+                    # prefix implies sharing every shallower one)
+                    read_k, wsrc = 0, -1
+                    for key2 in keys:
+                        if key2 not in owner:
+                            break
+                        read_k += 1
+                        wsrc = owner[key2]
+                    for key2 in keys[read_k:]:
+                        owner[key2] = k
+                        claims.append(key2)
+                    plan_sh[k] = (read_k, len(keys), wsrc)
+                free_ids = np.where(self.pool.ref == 0)[0]
+                # conservative capacity check against the ORIGINAL
+                # demand: the kernel must still be able to admit the
+                # hungriest entry after the node pages are pinned
+                if plan_sh and len(free_ids) >= (
+                        len(claims) + int(qdem.max(initial=0))):
+                    node_page: Dict[tuple, int] = {}
+                    for i2, key2 in enumerate(claims):
+                        pid = int(free_ids[i2])
+                        node_page[key2] = pid
+                        self.pool.ref[pid] += 1  # released at drain
+                        wave_pins.append(pid)
+                    for k, (read_k, nsh_k, wsrc) in plan_sh.items():
+                        chain = [node_page[k2]
+                                 for k2 in keys_of[k][:nsh_k]]
+                        qsh[k, :] = NP
+                        qsh[k, : len(chain)] = chain
+                        qdem[k] -= nsh_k
+                        qstart[k] = read_k * page
+                        qwsrc[k] = wsrc
+                        qwneed[k] = read_k * page
+                        if read_k:
+                            wave_deps = True
+                        wplans[k] = dataclasses.replace(
+                            wplans[k], shared=chain,
+                            start=int(qstart[k]), own=int(qdem[k]))
 
         B = self._B
         free = np.ones(B, bool)
@@ -1491,6 +1904,7 @@ class DeviceContinuousBatcher:
         last = np.zeros(B, np.int32)
         feat = np.zeros((B, n_feat), np.int32)
         hasf = np.zeros(B, bool)
+        seed = np.zeros(B, np.int32)
         out_tok = np.zeros((R, self.max_tokens), np.int32)
         if self.paged:
             scfg = eng.scfg
@@ -1505,6 +1919,7 @@ class DeviceContinuousBatcher:
             gen[b] = c["gen"]
             last[b] = c["last"]
             hasf[b] = c["hasf"]
+            seed[b] = c.get("seed", _default_seed(c["rid"]))
             if c["feat"] is not None:
                 feat[b, : len(c["feat"])] = c["feat"][:n_feat]
             out_tok[row, : c["gen"]] = c["toks"]
@@ -1514,7 +1929,6 @@ class DeviceContinuousBatcher:
                 pbuf[b, : len(c["prompt"])] = c["prompt"]
                 tbl[b] = c["tbl"]
                 reg[b] = c.get("reg", False)
-        traced = self.tracer is not None
         st = {
             "free": jnp.asarray(free),
             "req": jnp.asarray(req),
@@ -1522,6 +1936,7 @@ class DeviceContinuousBatcher:
             "last": jnp.asarray(last),
             "feat": jnp.asarray(feat),
             "hasf": jnp.asarray(hasf),
+            "seed": jnp.asarray(seed),
             "head": jnp.int32(0),
             "out_tok": jnp.asarray(out_tok),
             "out_len": jnp.zeros(R, jnp.int32),
@@ -1541,15 +1956,25 @@ class DeviceContinuousBatcher:
                 out_tbl=jnp.full((R, scfg.pages_per_slot), scfg.n_pages,
                                  jnp.int32),
             )
+            if scfg.share_prefix:
+                # carried slots' queue entries are gone: qidx = -1
+                st["qidx"] = jnp.full(B, -1, jnp.int32)
+                st["wdone"] = jnp.zeros(Nq, bool)
+            if self.spec_k:
+                st["spec_prop"] = jnp.int32(0)
+                st["spec_acc"] = jnp.int32(0)
             args = (jnp.asarray(qtok), jnp.asarray(qlen),
                     jnp.asarray(qreq), jnp.asarray(qfeat),
                     jnp.asarray(qhasf), jnp.asarray(qsh),
                     jnp.asarray(qdem), jnp.asarray(qstart),
-                    jnp.asarray(qcow), jnp.asarray(qreg), jnp.int32(n))
+                    jnp.asarray(qcow), jnp.asarray(qreg),
+                    jnp.asarray(qseed), jnp.asarray(qwsrc),
+                    jnp.asarray(qwneed), jnp.int32(n))
         else:
             st["decode"] = self._decode
             args = (jnp.asarray(qtok), jnp.asarray(qreq),
-                    jnp.asarray(qfeat), jnp.asarray(qhasf), jnp.int32(n))
+                    jnp.asarray(qfeat), jnp.asarray(qhasf),
+                    jnp.asarray(qseed), jnp.int32(n))
         if self.mesh is not None:
             # place the donated slot pytree (decode cache per cache_pspec
             # or page pool per paged_cache_pspec, slot arrays over data,
@@ -1628,6 +2053,14 @@ class DeviceContinuousBatcher:
         if self.paged:
             self._pages = st["pages"]
             self.pool.ref[:] = np.asarray(st["pref"])
+            if wave_pins:
+                # drop the host pins on in-wave shared node pages (live
+                # readers/writers still hold their fill-side refs; a
+                # fully-drained chain frees here)
+                np.subtract.at(self.pool.ref, np.asarray(wave_pins), 1)
+            if self.spec_k:
+                self._spec_prop += int(np.asarray(st["spec_prop"]))
+                self._spec_acc += int(np.asarray(st["spec_acc"]))
             if self._exh_holds:
                 # phantom holds never outlive the run: the host mirror
                 # must agree with live reservations + cache holds
@@ -1874,6 +2307,7 @@ class DeviceContinuousBatcher:
             s_last = np.asarray(st["last"])
             s_feat = np.asarray(st["feat"])
             s_hasf = np.asarray(st["hasf"])
+            s_seed = np.asarray(st["seed"])
             if self.paged:
                 s_pos = np.asarray(st["pos"])
                 s_plen = np.asarray(st["plen"])
@@ -1888,6 +2322,7 @@ class DeviceContinuousBatcher:
                     rid=req_ids[qi], gen=int(s_gen[b]), last=int(s_last[b]),
                     hasf=bool(s_hasf[b]),
                     feat=s_feat[b].copy() if s_hasf[b] else None,
+                    seed=int(s_seed[b]),
                     toks=out_tok[qi, : s_gen[b]].copy())
                 if self.paged:
                     self._carry[b].update(
@@ -1896,7 +2331,16 @@ class DeviceContinuousBatcher:
                                 for t in s_pbuf[b, : s_plen[b]]],
                         tbl=s_tbl[b].copy(),
                         reg=bool(s_reg[b]))
-            head = int(np.asarray(st["head"]))
-            for rid, prompt, f in reversed(kept[head:]):
-                self.queue.appendleft((rid, prompt, f))
+        # re-enqueue un-admitted entries regardless of the alive flag:
+        # with in-wave sharing a reader blocked on a dead writer idles
+        # the kernel out (alive False) while its entry is still pending
+        head = int(np.asarray(st["head"]))
+        for rid, prompt, f in reversed(kept[head:]):
+            self.queue.appendleft((rid, prompt, f))
+        if (wave_deps and not bool(alive) and head > 0
+                and remaining > 0 and self.queue):
+            # in-wave readers were left waiting on a writer that died
+            # (gate drop / fault eviction): re-plan them cold — their
+            # next wave sees the writer gone and shares among survivors
+            return self.run(remaining)
         return self.done

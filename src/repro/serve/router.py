@@ -3,12 +3,14 @@
 ``ShardedServe`` is the multi-host face of the serve path: a
 ``("data", "model")`` mesh is split into one submesh per data slice (a
 "host"), each running its own placed ``ServeEngine`` +
-``DeviceContinuousBatcher`` — params replicated across the slice (see
-``ServeEngine``: TP param sharding would reassociate the row-parallel
-psum and break bit-exact greedy decode), the donated slot pytree placed
-with ``dist.sharding.serve_state_shardings`` (KV sequence sharded over
-the slice's ``model`` axis), and the fused gate+decode+sample+evict
-step still ONE jitted ``lax.while_loop`` per shard (``sync_every``
+``DeviceContinuousBatcher`` — params replicated across the slice by
+default (``tp_params=True`` opts into tensor-parallel param sharding,
+whose reassociated row-parallel psum can flip rare near-tie argmaxes;
+the serve bench gates that path on token-flip *rate*, not bitwise
+equality), the donated slot pytree placed with
+``dist.sharding.serve_state_shardings`` (KV sequence sharded over the
+slice's ``model`` axis), and the fused gate+decode+sample+evict step
+still ONE jitted ``lax.while_loop`` per shard (``sync_every``
 unchanged).
 
 Routing and drain semantics:
@@ -62,7 +64,7 @@ from ..dist import sharding as SH
 from ..dist.stragglers import StragglerMonitor
 from ..launch.mesh import data_submeshes
 from .engine import (DeviceContinuousBatcher, ServeConfig, ServeEngine,
-                     validate_prompt_or_drop)
+                     _default_seed, validate_prompt_or_drop)
 
 
 def _hrw_weight(key: bytes, s: int) -> int:
@@ -128,7 +130,8 @@ class ShardedServe:
                  deadline_s: Optional[float] = None,
                  fault_injector=None, straggler_threshold: float = 1.5,
                  straggler_strikes: Optional[int] = None,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 spec_k: int = 0, draft=None, tp_params: bool = False):
         self.mesh = mesh
         if mesh is not None:
             self.submeshes = data_submeshes(mesh)
@@ -145,7 +148,8 @@ class ShardedServe:
         self._clock = clock
         self.engines = [
             ServeEngine(cfg, params, scfg, gate=gate,
-                        gate_backend=gate_backend, mesh=sm)
+                        gate_backend=gate_backend, mesh=sm,
+                        tp_params=tp_params)
             for sm in self.submeshes]
         # pregate=False: the router already gated the wave (one sharded
         # launch in _route), so a per-shard pre-admission launch would
@@ -161,7 +165,8 @@ class ShardedServe:
                                     max_retries=max_retries,
                                     retry_backoff=retry_backoff,
                                     fault_injector=fault_injector,
-                                    clock=clock)
+                                    clock=clock,
+                                    spec_k=spec_k, draft=draft)
             for eng in self.engines]
         self._gate_fn = self.engines[0].gate_fn
         self._drop = scfg.gate_action_drop
@@ -235,14 +240,19 @@ class ShardedServe:
     # -------------------------------------------------------------- routing
     def submit(self, request_id, prompt_tokens,
                features: Optional[np.ndarray] = None,
-               deadline_s: Optional[float] = None):
+               deadline_s: Optional[float] = None,
+               seed: Optional[int] = None):
         """Enqueue; admission + shard placement happen batched in
         ``run()`` so routing sees whole-wave queue depths.
         ``prompt_tokens`` is a token sequence (bare int = length-1
         prompt), threaded through to the shard's chunked prefill.
         ``deadline_s`` (falls back to the router default) starts
         counting HERE — queue wait, routing, failover hops and decode
-        all spend the same budget."""
+        all spend the same budget.  ``seed`` keys the request's
+        sampling noise when ``temperature > 0``; it is resolved once
+        here (default: hash of the request id) and rides the replay
+        registry, so a failover replay re-samples the identical
+        stream on the surviving shard."""
         # same validation the shard batchers apply, surfaced at submit
         # instead of mid-route (where a failed request would vanish
         # from done/dropped accounting); empty prompts record their
@@ -270,8 +280,9 @@ class ShardedServe:
                 return False
             dabs = self._clock() + float(ddl)
         feat = None if features is None else np.asarray(features)
+        sd = int(seed) if seed is not None else _default_seed(request_id)
         # replay registry: failover re-submits lost requests from here
-        self.requests[request_id] = (prompt, feat, dabs)
+        self.requests[request_id] = (prompt, feat, dabs, sd)
         self.pending.append((request_id, prompt, feat))
         return True
 
@@ -342,10 +353,11 @@ class ShardedServe:
                 if self.tracer is not None:
                     self.tracer.instant("rebalance", tid=s,
                                         rid=repr(rid), home=home, to=s)
-            dabs = self.requests.get(rid, (None, None, None))[2]
+            _, _, dabs, sd = self.requests.get(
+                rid, (None, None, None, None))
             ddl = None if dabs is None else dabs - self._clock()
             if not self.batchers[s].submit(rid, prompt, features=feat,
-                                           deadline_s=ddl):
+                                           deadline_s=ddl, seed=sd):
                 continue  # shard rejected (queue-full/expired): merged
             self.assigned[s].append(rid)
             depth[s] += 1
@@ -383,7 +395,8 @@ class ShardedServe:
         survivors = self._alive_shards()
         moved = 0
         for rid in lost:
-            prompt, feat, dabs = self.requests.get(rid, (None, None, None))
+            prompt, feat, dabs, sd = self.requests.get(
+                rid, (None, None, None, None))
             hops = self.retries.get(rid, 0) + 1
             self.retries[rid] = hops
             if not survivors or hops > self.max_retries:
@@ -395,7 +408,8 @@ class ShardedServe:
             to = rendezvous_shard(rid, survivors)
             ok = self.batchers[to].submit(
                 rid, prompt, features=feat,
-                deadline_s=None if dabs is None else dabs - now)
+                deadline_s=None if dabs is None else dabs - now,
+                seed=sd)
             if ok:
                 self.assigned[to].append(rid)
                 moved += 1

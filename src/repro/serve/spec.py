@@ -1,0 +1,119 @@
+"""Speculative-decoding draft models: Planter-mapped tables on the
+serve hot path.
+
+This is the paper's thesis pointed at LLM serving: a host-trained model
+(``ml.NGramModel``) is *mapped* into an exact-match lookup table
+(``core.tables.LookupTable``), and the table predicts in the data path
+— inside the fused device step — at effectively zero marginal cost
+(one ``[V]`` int32 gather per draft token).  The LM then verifies all
+``k`` drafted tokens in one chunked ``paged_decode_step`` launch (the
+PR-4 chunked-prefill machinery is exactly the verify primitive), so an
+accepted draft turns ``k`` sequential launches into one.
+
+Only ``order=1`` (bigram) models compile: the fused step's rolling
+context is the single ``last`` token per slot, so the draft chain
+``d_1 = T[last], d_{j+1} = T[d_j]`` is ``k`` pure gathers.  Higher
+orders stay host-side (see ``NGramModel``).
+
+``DraftModel.accounting`` carries the paper-style resource numbers
+(stages/entries/bits) so benchmarks can report the draft's table cost
+next to the gate's.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from ..core.pipeline import MappedModel, Pipeline, Stage
+from ..core.tables import LookupTable, Resources
+from ..ml.ngram import NGramModel
+
+__all__ = ["DraftModel", "compile_draft", "train_draft"]
+
+
+@dataclasses.dataclass
+class DraftModel:
+    """A compiled (table-mapped) draft predictor.
+
+    ``table`` is the deployable artifact: ``table.table[v, 0]`` is the
+    drafted successor of token ``v``.  ``mapped`` wraps it in the
+    standard ``MappedModel`` shape (numpy reference + jax factory +
+    resource accounting) so the draft plugs into the same tooling as
+    the gate.
+    """
+
+    table: LookupTable
+    mapped: MappedModel
+    vocab_size: int
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def device_table(self):
+        """The dense ``[V]`` int32 successor table for the fused step."""
+        import jax.numpy as jnp
+        return jnp.asarray(self.table.table[:, 0], jnp.int32)
+
+    def predict(self, tokens: np.ndarray) -> np.ndarray:
+        return self.mapped.predict(np.asarray(tokens))
+
+    def accounting(self) -> Resources:
+        return self.mapped.resources()
+
+
+def compile_draft(model: NGramModel,
+                  vocab_size: Optional[int] = None) -> DraftModel:
+    """Map a trained bigram ``NGramModel`` into its lookup table.
+
+    Unseen contexts draft the model's fallback token — a wrong draft is
+    never incorrect output (the verify step rejects it), only a wasted
+    chunk position.
+    """
+    if model.order != 1 or model.n_buckets:
+        raise ValueError(
+            "only dense order-1 (bigram) n-gram models compile to the "
+            f"in-step draft table (got order={model.order}, "
+            f"n_buckets={model.n_buckets}); higher orders are host-only")
+    if model.table_ is None:
+        raise ValueError("model is not fitted")
+    V = int(vocab_size or model.vocab_size_)
+    tbl = np.full(V, model.fallback_, np.int32)
+    n = min(V, len(model.table_))
+    seen = model.table_[:n] >= 0
+    tbl[:n] = np.where(seen, model.table_[:n], np.int32(model.fallback_))
+    tbl = np.clip(tbl, 0, V - 1)
+    bits = max(1, int(np.ceil(np.log2(max(2, V)))))
+    lut = LookupTable(table=tbl[:, None], in_bits=bits, action_bits=bits)
+    pipeline = Pipeline([Stage(name="draft_successor", kind="lut",
+                               tables=[lut])])
+
+    def predict_np(x: np.ndarray) -> np.ndarray:
+        return lut.lookup(np.asarray(x, np.int64))[..., 0]
+
+    def make_jax_fn(backend: str = "jnp"):
+        import jax
+        import jax.numpy as jnp
+        dev_tbl = jnp.asarray(tbl)
+        return jax.jit(
+            lambda t: dev_tbl[jnp.clip(t, 0, V - 1)])
+
+    mapped = MappedModel(
+        model_kind="ngram", strategy="lb", pipeline=pipeline,
+        predict_np=predict_np, make_jax_fn=make_jax_fn,
+        meta={"order": 1, "vocab_size": V,
+              "coverage": float(np.mean(model.table_ >= 0))
+              if len(model.table_) else 0.0})
+    return DraftModel(table=lut, mapped=mapped, vocab_size=V,
+                      meta=dict(mapped.meta))
+
+
+def train_draft(sequences: Sequence[Sequence[int]],
+                vocab_size: int) -> DraftModel:
+    """Fit + compile in one call (the serve_bench / launcher path).
+
+    ``sequences`` should be prompt+stream token chains from the same
+    workload the draft will speculate on — the draft imitates the LM,
+    it never has to be *right* in any distributional sense.
+    """
+    model = NGramModel(order=1).fit(sequences, vocab_size=vocab_size)
+    return compile_draft(model, vocab_size)

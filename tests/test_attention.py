@@ -198,11 +198,10 @@ def test_paged_attention_masks_at_page_boundaries(window):
         np.asarray(kv1.k), np.asarray(kv2.k))
 
 
-@pytest.mark.parametrize("quantized", [False, True])
-def test_paged_decode_attention_legacy_call_shape_shim(quantized):
-    """The pre-PagedKV positional call shape still works for one
-    release: it warns, rewraps into PagedKV, and returns bitwise the
-    same values (legacy tuple style) as the new API."""
+def test_paged_decode_attention_legacy_call_shape_removed():
+    """The pre-PagedKV positional call shape was shimmed for exactly one
+    release (PR 8); it is now a hard TypeError, for loose page pools and
+    for stray positionals after a PagedKV alike."""
     rng = np.random.default_rng(23)
     B, H, hd, n_ps = 2, 2, 8, 2
     D = H * hd
@@ -213,38 +212,29 @@ def test_paged_decode_attention_legacy_call_shape_shim(quantized):
     positions = jnp.broadcast_to(jnp.arange(3)[None], (B, 3))
     page_ids = jnp.take_along_axis(tbl, positions // PAGE, axis=1)
     page_off = positions % PAGE
-    if quantized:
-        kp = jnp.zeros((N, PAGE, H, hd), jnp.int8)
-        scales = (jnp.zeros((N, PAGE, H, 1), jnp.float32),
-                  jnp.zeros((N, PAGE, H, 1), jnp.float32))
-        kv0 = AB.PagedKV(k=kp, v=kp, k_scale=scales[0], v_scale=scales[1])
-    else:
-        kp = jnp.zeros((N, PAGE, H, hd), jnp.float32)
-        scales = None
-        kv0 = AB.PagedKV(k=kp, v=kp)
+    kp = jnp.zeros((N, PAGE, H, hd), jnp.float32)
+    kv0 = AB.PagedKV(k=kp, v=kp)
     kwargs = dict(n_heads=H, n_kv_heads=H, head_dim=hd, rope_theta=0.0,
                   window=jnp.int32(0), qk_norm=False, norm_eps=1e-6)
-    with pytest.warns(DeprecationWarning, match="PagedKV"):
-        legacy = A.paged_decode_attention_block(
-            p, x, kp, kp, tbl, positions, page_ids, page_off,
-            kv_scales=scales, **kwargs)
-    out_new, kv_new = A.paged_decode_attention_block(
-        p, x, kv0.with_view(tbl, positions, page_ids, page_off), **kwargs)
-    np.testing.assert_array_equal(np.asarray(legacy[0]),
-                                  np.asarray(out_new))
-    np.testing.assert_array_equal(np.asarray(legacy[1]),
-                                  np.asarray(kv_new.k))
-    np.testing.assert_array_equal(np.asarray(legacy[2]),
-                                  np.asarray(kv_new.v))
-    if quantized:
-        assert len(legacy) == 4
-        np.testing.assert_array_equal(np.asarray(legacy[3][0]),
-                                      np.asarray(kv_new.k_scale))
-    else:
-        assert len(legacy) == 3
-    # mixing the new PagedKV arg with legacy positionals is an error
+    with pytest.raises(TypeError):
+        A.paged_decode_attention_block(
+            p, x, kp, kp, tbl, positions, page_ids, page_off, **kwargs)
+    # a bare page pool in the kv slot gets the explanatory error
+    with pytest.raises(TypeError, match="PagedKV"):
+        A.paged_decode_attention_block(p, x, kp, **kwargs)
+    # stray positionals after a PagedKV are also rejected (keyword-only)
     with pytest.raises(TypeError):
         A.paged_decode_attention_block(p, x, kv0, tbl, **kwargs)
+    # the legacy tuple pool to paged_decode_step is equally gone
+    from repro.arch import model as M
+    from repro.arch.config import ArchConfig
+    cfg = ArchConfig(name="t", family="dense", n_layers=1, d_model=D,
+                     n_heads=H, n_kv_heads=H, d_ff=2 * D, vocab_size=32)
+    with pytest.raises(TypeError, match="PagedKV"):
+        M.paged_decode_step({}, (kp, kp), tbl,
+                            jnp.zeros((B,), jnp.int32),
+                            jnp.zeros((B, 1), jnp.int32),
+                            jnp.ones((B,), jnp.int32), cfg)
 
 
 @pytest.mark.parametrize("window", [0, PAGE])

@@ -316,6 +316,125 @@ def test_batcher_fault_evictions_no_page_leak(seed, _pool_engine):
     assert acct["free"] + acct["cached"] == cb.pool.n
 
 
+def test_in_wave_cold_prefix_sharing(_pool_engine):
+    """Identical full-page prefixes submitted in ONE wave to a COLD
+    pool must share from wave 0: the wave plan dedupes the prefix
+    inside the wave (no warm trie required), streams stay bit-identical
+    to an unshared pool, and every page drains clean.
+
+    Exactly ``max_batch`` requests => a single wave, so any
+    ``shared_tokens`` here can only come from in-wave dedup (the trie
+    is empty until the wave completes)."""
+    from repro.serve.engine import DeviceContinuousBatcher
+
+    prompts = [[5] * 17 + [i] for i in range(4)]  # 2 full pages shared
+
+    def run(**kw):
+        cb = DeviceContinuousBatcher(_pool_engine(pages=24, **kw),
+                                     eos_token=-1, max_tokens=4,
+                                     sync_every=3, prefill_chunk=4)
+        for rid, p in enumerate(prompts):
+            cb.submit(rid, p)
+        done = dict(cb.run(max_steps=400))
+        return cb, done
+
+    un, done_un = run(share_prefix=False)
+    sh, done_sh = run()
+    assert done_sh == done_un, "in-wave sharing changed token streams"
+    assert sh.pool.stats["shared_tokens"] > 0, (
+        "cold identical prefixes in a single wave did not share — "
+        "in-wave dedup is not running at wave 0")
+    assert (sh.pool.ref >= 0).all()
+    acct = sh.pool.page_accounting()
+    assert acct["leaked"] == 0 and acct["live"] == 0
+
+
+def test_in_wave_sharing_writer_death_recovers(_pool_engine):
+    """When the wave's prefix WRITER dies (deadline eviction) before
+    completing its prompt, the blocked in-wave readers must re-plan
+    cold and still finish with the right streams — no hang, no leak."""
+    from repro.serve.engine import DeviceContinuousBatcher
+
+    prompts = [[5] * 17 + [i] for i in range(4)]
+
+    ref = DeviceContinuousBatcher(_pool_engine(pages=24,
+                                               share_prefix=False),
+                                  eos_token=-1, max_tokens=4,
+                                  sync_every=3, prefill_chunk=4)
+    for rid in (1, 2, 3):
+        ref.submit(rid, prompts[rid])
+    done_ref = dict(ref.run(max_steps=400))
+
+    t = [0.0]
+
+    def clock():
+        t[0] += 1.0
+        return t[0]
+
+    cb = DeviceContinuousBatcher(_pool_engine(pages=24), eos_token=-1,
+                                 max_tokens=4, sync_every=3,
+                                 prefill_chunk=4, clock=clock)
+    # request 0 is FIFO-first => it becomes the wave's prefix writer,
+    # and its zero deadline kills it before the prefix completes
+    cb.submit(0, prompts[0], deadline_s=0.0)
+    for rid in (1, 2, 3):
+        cb.submit(rid, prompts[rid])
+    done = dict(cb.run(max_steps=400))
+    assert 0 in cb.dropped and cb.drop_reasons[0] == "deadline"
+    assert {r: done[r] for r in (1, 2, 3)} == done_ref, (
+        "readers blocked on a dead writer diverged after re-planning")
+    assert (cb.pool.ref >= 0).all()
+    acct = cb.pool.page_accounting()
+    assert acct["leaked"] == 0 and acct["live"] == 0
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_in_wave_cold_sharing_random_prefixes(seed, _pool_engine):
+    """Property harness for in-wave sharing: random groups of prompts
+    over a tiny vocab (constant full-page prefix collisions), all
+    submitted COLD and drained through bounded run() calls (the resume
+    path).  After every run the refcounts stay non-negative; the final
+    streams must match an unshared reference and the pool must account
+    for every page."""
+    from repro.serve.engine import DeviceContinuousBatcher
+
+    rng = np.random.default_rng(seed)
+    page = 8
+    prompts = []
+    for _ in range(3):  # groups sharing 1-2 full pages of prefix
+        d = int(rng.integers(1, 3))
+        prefix = [int(t) for t in rng.integers(1, 4, d * page)]
+        for _ in range(int(rng.integers(2, 4))):
+            tail = [int(t) for t in rng.integers(1, 97,
+                                                 rng.integers(1, 4))]
+            prompts.append(prefix + tail)
+    rng.shuffle(prompts)
+
+    def drain(cb, step_rng):
+        for rid, p in enumerate(prompts):
+            cb.submit(rid, p)
+        for _ in range(200):
+            cb.run(max_steps=int(step_rng.integers(2, 8)))
+            assert (cb.pool.ref >= 0).all()
+            if not cb.queue and all(c is None for c in cb._carry):
+                break
+        return dict(cb.done)
+
+    ref = DeviceContinuousBatcher(_pool_engine(pages=40,
+                                               share_prefix=False),
+                                  eos_token=-1, max_tokens=3,
+                                  sync_every=2, prefill_chunk=4)
+    done_ref = drain(ref, np.random.default_rng(seed + 100))
+    cb = DeviceContinuousBatcher(_pool_engine(pages=40), eos_token=-1,
+                                 max_tokens=3, sync_every=2,
+                                 prefill_chunk=4)
+    done_sh = drain(cb, np.random.default_rng(seed + 100))
+    assert done_sh == done_ref
+    acct = cb.pool.page_accounting()
+    assert acct["leaked"] == 0 and acct["live"] == 0
+    assert acct["free"] + acct["cached"] == cb.pool.n
+
+
 @pytest.fixture(scope="module")
 def _pool_engine():
     import jax
